@@ -1,0 +1,15 @@
+"""Shared benchmark plumbing."""
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def write_json(name: str, payload) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path

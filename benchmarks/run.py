@@ -1,0 +1,21 @@
+"""Run every paper-table benchmark; print a summary per table/figure."""
+
+from . import fig1_scaling, fig2_cost_ratio, fig3_memory, lm_micro, \
+    table1_sizes
+
+
+def main() -> None:
+    print("=== Table 1: problem sizes ===")
+    table1_sizes.main()
+    print("\n=== Figure 2: cost per synaptic event (measured) ===")
+    fig2_cost_ratio.main()
+    print("\n=== Figure 1: strong scaling ===")
+    fig1_scaling.main()
+    print("\n=== Figure 3: bytes per synapse ===")
+    fig3_memory.main()
+    print("\n=== LM micro-benchmarks ===")
+    lm_micro.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper Table 1: problem sizes (neurons / recurrent / total synapses).
+
+Reproduced exactly from the connectivity laws with edge effects -- the
+check that our synapse-generation rules ARE the paper's.
+"""
+
+from repro.core.connectivity import (exponential_law, gaussian_law,
+                                     expected_synapse_counts)
+
+from .common import write_json
+
+PAPER = {  # grid -> law -> (recurrent G, total G)
+    (24, 24): {"gaussian": (0.9, 1.2), "exponential": (1.5, 1.8)},
+    (48, 48): {"gaussian": (3.5, 5.0), "exponential": (5.9, 7.4)},
+    (96, 96): {"gaussian": (14.2, 20.4), "exponential": (23.4, 29.6)},
+}
+
+
+def run() -> dict:
+    rows = []
+    for grid, laws in PAPER.items():
+        for law_name, (p_rec, p_tot) in laws.items():
+            law = gaussian_law() if law_name == "gaussian" else \
+                exponential_law()
+            c = expected_synapse_counts(law, *grid)
+            rows.append({
+                "grid": f"{grid[0]}x{grid[1]}",
+                "law": law_name,
+                "neurons_M": round(c["neurons"] / 1e6, 2),
+                "recurrent_G": round(c["recurrent_synapses"] / 1e9, 2),
+                "total_G": round(c["total_synapses"] / 1e9, 2),
+                "paper_recurrent_G": p_rec,
+                "paper_total_G": p_tot,
+                "recurrent_err": round(abs(
+                    c["recurrent_synapses"] / 1e9 - p_rec) / p_rec, 3),
+                "remote_per_neuron": round(c["remote_per_neuron"], 1),
+            })
+    out = {"rows": rows,
+           "max_recurrent_err": max(r["recurrent_err"] for r in rows)}
+    write_json("table1.json", out)
+    return out
+
+
+def main():
+    out = run()
+    print("grid,law,neurons_M,recurrent_G(paper),total_G(paper),err")
+    for r in out["rows"]:
+        print(f"{r['grid']},{r['law']},{r['neurons_M']},"
+              f"{r['recurrent_G']}({r['paper_recurrent_G']}),"
+              f"{r['total_G']}({r['paper_total_G']}),{r['recurrent_err']}")
+    print(f"max recurrent error vs paper: {out['max_recurrent_err']:.1%}")
+
+
+if __name__ == "__main__":
+    main()

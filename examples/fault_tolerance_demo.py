@@ -1,0 +1,43 @@
+"""Fault-tolerance demo: inject a node failure mid-training and watch
+the driver restore from the last checkpoint and replay to the exact
+same result.
+
+    PYTHONPATH=src python examples/fault_tolerance_demo.py
+"""
+
+import shutil
+
+from repro.launch.train import build_trainer
+
+CKPT = "/tmp/repro_ft_demo"
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    crashed = []
+
+    def chaos(step):
+        if step == 30 and not crashed:
+            crashed.append(step)
+            raise RuntimeError("simulated TPU worker loss at step 30")
+
+    driver, cfg = build_trainer("qwen2-1.5b", batch=4, seq=64, steps=50,
+                                ckpt_dir=CKPT, ckpt_every=10,
+                                fault_hook=chaos)
+    out = driver.run(50)
+    losses = {m["step"]: m["loss"] for m in out["metrics"]}
+    print(f"injected crash at step 30 -> restored from step 30's last "
+          f"checkpoint (step 30 // 10 * 10 = 30) and replayed")
+    print(f"completed {out['final_step']} steps; "
+          f"loss {losses[0]:.3f} -> {losses[max(losses)]:.3f}")
+    # step 35 was computed twice (before+after crash): deterministic
+    replay = [m for m in out["metrics"] if m["step"] == 35]
+    if len(replay) == 2:
+        assert abs(replay[0]["loss"] - replay[1]["loss"]) < 1e-5
+        print(f"replayed step 35 reproduced exactly: "
+              f"{replay[0]['loss']:.6f} == {replay[1]['loss']:.6f}")
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Train an assigned-architecture (reduced) LM end-to-end with the
+fault-tolerant runtime: synthetic pipeline, AdamW, checkpoints, and a
+loss curve that actually goes down.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-1.5b \\
+        --steps 200
+"""
+
+import argparse
+import json
+import os
+import shutil
+
+from repro.launch.train import build_trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--fresh", action="store_true")
+    args = ap.parse_args()
+    if args.fresh and os.path.isdir(args.ckpt_dir):
+        shutil.rmtree(args.ckpt_dir)
+
+    driver, cfg = build_trainer(args.arch, args.batch, args.seq,
+                                args.steps, args.ckpt_dir)
+    print(f"training {cfg.name} ({cfg.n_layers}L d={cfg.d_model}) for "
+          f"{args.steps} steps ...")
+    out = driver.run(args.steps)
+    losses = [m["loss"] for m in out["metrics"]]
+    k = max(len(losses) // 10, 1)
+    for i in range(0, len(losses), k):
+        print(f"  step {out['metrics'][i]['step']:5d}  "
+              f"loss {losses[i]:8.4f}  ({out['metrics'][i]['dt']*1e3:.0f} ms)")
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    assert losses[-1] < losses[0], "loss did not decrease!"
+    with open("/tmp/repro_train_lm_curve.json", "w") as f:
+        json.dump(losses, f)
+    print("loss curve -> /tmp/repro_train_lm_curve.json")
+
+
+if __name__ == "__main__":
+    main()

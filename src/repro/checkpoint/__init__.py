@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing: atomic, hashed, keep-k, async, elastic."""
+
+from .store import (save_checkpoint, restore_checkpoint, latest_step,
+                    AsyncCheckpointer)

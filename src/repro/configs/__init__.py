@@ -1,0 +1,54 @@
+"""Config registry: ``--arch <id>`` resolves here.
+
+LM architectures (the 10 assigned cells) + the paper's own SNN cases.
+"""
+
+from __future__ import annotations
+
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+
+from . import (falcon_mamba_7b, gemma_2b, granite_moe_1b, internvl2_26b,
+               kimi_k2_1t, qwen2_1_5b, qwen2_5_3b, qwen3_8b,
+               recurrentgemma_9b, whisper_small)
+from . import snn
+
+_MODULES = {
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "falcon-mamba-7b": falcon_mamba_7b,
+    "qwen2-1.5b": qwen2_1_5b,
+    "qwen3-8b": qwen3_8b,
+    "gemma-2b": gemma_2b,
+    "qwen2.5-3b": qwen2_5_3b,
+    "internvl2-26b": internvl2_26b,
+    "whisper-small": whisper_small,
+    "granite-moe-1b-a400m": granite_moe_1b,
+    "kimi-k2-1t-a32b": kimi_k2_1t,
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+# Sub-quadratic archs run the long_500k cell; pure full-attention archs
+# skip it (and encoder-only would skip decode -- none here are).
+LONG_CONTEXT_ARCHS = ("recurrentgemma-9b", "falcon-mamba-7b")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _MODULES[name].CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _MODULES[name].reduced()
+
+
+def shape_cells(arch: str):
+    """The shape cells this arch runs (spec-mandated skips applied)."""
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_CONTEXT_ARCHS:
+        cells.append("long_500k")
+    return [SHAPES[c] for c in cells]
+
+
+def all_cells():
+    for a in ARCH_NAMES:
+        for s in shape_cells(a):
+            yield a, s

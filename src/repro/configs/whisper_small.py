@@ -1,0 +1,28 @@
+"""whisper-small [audio] -- encoder-decoder with conv frontend stub.
+
+12L d_model=768 12H (kv=12, MHA) d_ff=3072 vocab=51865
+[arXiv:2212.04356; unverified].  The conv frontend is a STUB:
+``input_specs()`` provides 1500 precomputed frame embeddings.  Shape
+semantics (DESIGN.md section 5): ``seq_len`` is the decoder-side length;
+decode shapes cache both self- and cross-attention.  No rope --
+sinusoidal absolute positions, whisper-style.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+    vocab_size=51865, use_rope=False, mlp_act="gelu",
+    encoder_layers=12, encoder_seq=1500, cross_attn=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small-reduced", family="audio",
+        n_layers=3, d_model=48, n_heads=4, n_kv_heads=4, d_ff=96,
+        vocab_size=512, use_rope=False, mlp_act="gelu",
+        encoder_layers=2, encoder_seq=12, cross_attn=True,
+        dtype="float32", attn_chunk_q=32, attn_chunk_k=32, loss_chunk=32,
+    )

@@ -1,0 +1,15 @@
+"""The paper's primary contribution: the DPSNN spiking-network simulator
+re-architected for TPU meshes -- connectivity laws, column-grid domain
+decomposition, synapse tables, LIF+SFA dynamics, halo-exchange spike
+communication, STDP, and the paper's cost/memory metrics."""
+
+from .connectivity import (ConnectivityLaw, exponential_law, gaussian_law,
+                           expected_synapse_counts)
+from .grid import ColumnGrid, TileDecomposition, choose_tiling
+from .neuron import LIFParams, init_state, lif_sfa_step
+from .synapses import SynapseTableSpec, build_tables
+from .engine import (EngineConfig, init_sim_state, build_shard_tables, run,
+                     run_plastic, init_plasticity, firing_rate_hz)
+from .dist_engine import DistConfig, make_sim_fn, simulate
+from .stdp import STDPParams
+from . import metrics

@@ -1,0 +1,172 @@
+"""Lateral connectivity laws from the paper.
+
+Two distance-dependent connection-probability laws over a 2D grid of
+cortical columns (grid step ``alpha`` microns):
+
+* Gaussian (short range):   p(r) = A * exp(-r^2 / (2 sigma^2))
+* Exponential (long range): p(r) = A * exp(-r / lambda)
+
+with a hard cutoff: offsets whose probability falls below ``cutoff``
+(paper: 1/1000) are not connected at all.  The cutoff induces a square
+*stencil* of connected columns: 7x7 for the paper's Gaussian parameters
+(A=0.05, sigma=100um) and 21x21 for the exponential ones (A=0.03,
+lambda=290um).
+
+Local (same-column) connectivity is a separate uniform probability
+``p_local`` calibrated so that each neuron projects ~990 local synapses
+(80% of the Gaussian-case total).
+
+Only excitatory neurons project laterally (see DESIGN.md section 2 -- this
+is the reading that reproduces the paper's ~250 / >1000 remote-synapse
+counts and Table 1 totals).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import numpy as np
+
+# Paper constants
+ALPHA_UM = 100.0          # columnar grid step (um)
+CUTOFF = 1.0e-3           # connection-probability cutoff
+NEURONS_PER_COLUMN = 1240
+FRAC_EXCITATORY = 0.8
+P_LOCAL = 990.0 / NEURONS_PER_COLUMN   # ~0.7984 -> ~990 local syn / neuron
+EXTERNAL_SYNAPSES = 540
+EXTERNAL_RATE_HZ = 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ConnectivityLaw:
+    """A lateral connection-probability law p(r)."""
+
+    kind: str                 # "gaussian" | "exponential"
+    amplitude: float          # A, peak connection probability
+    scale_um: float           # sigma (gaussian) or lambda (exponential)
+    cutoff: float = CUTOFF
+    alpha_um: float = ALPHA_UM
+
+    def prob(self, r_um) -> np.ndarray:
+        """Connection probability at distance r (um). Applies the cutoff."""
+        r = np.asarray(r_um, dtype=np.float64)
+        if self.kind == "gaussian":
+            p = self.amplitude * np.exp(-(r ** 2) / (2.0 * self.scale_um ** 2))
+        elif self.kind == "exponential":
+            p = self.amplitude * np.exp(-r / self.scale_um)
+        else:
+            raise ValueError(f"unknown connectivity kind: {self.kind}")
+        return np.where(p > self.cutoff, p, 0.0)
+
+    @property
+    def r_cut_um(self) -> float:
+        """Distance at which p(r) crosses the cutoff."""
+        if self.amplitude <= self.cutoff:
+            return 0.0
+        if self.kind == "gaussian":
+            return self.scale_um * math.sqrt(2.0 * math.log(self.amplitude / self.cutoff))
+        return self.scale_um * math.log(self.amplitude / self.cutoff)
+
+    @property
+    def radius(self) -> int:
+        """Stencil radius in grid steps (paper: 3 -> 7x7, 10 -> 21x21)."""
+        return int(math.ceil(self.r_cut_um / self.alpha_um))
+
+    @property
+    def stencil_width(self) -> int:
+        return 2 * self.radius + 1
+
+    def stencil_offsets(self) -> np.ndarray:
+        """All (dy, dx) integer offsets with p > cutoff, excluding (0, 0).
+
+        Returns an int array of shape (K, 2).  (0, 0) is excluded because
+        local (same-column) connectivity follows the separate uniform
+        ``P_LOCAL`` rule.
+        """
+        rad = self.radius
+        dy, dx = np.mgrid[-rad:rad + 1, -rad:rad + 1]
+        dy, dx = dy.ravel(), dx.ravel()
+        r = self.alpha_um * np.hypot(dy, dx)
+        keep = (self.prob(r) > 0.0) & ~((dy == 0) & (dx == 0))
+        return np.stack([dy[keep], dx[keep]], axis=-1).astype(np.int32)
+
+    def offset_probs(self) -> np.ndarray:
+        """p(r) for each stencil offset, aligned with stencil_offsets()."""
+        off = self.stencil_offsets()
+        r = self.alpha_um * np.hypot(off[:, 0], off[:, 1])
+        return self.prob(r)
+
+    def offset_delays(self, v_axon_um_per_ms: float = 300.0,
+                      dt_ms: float = 1.0, d_max: int = 8) -> np.ndarray:
+        """Distance-dependent axonal delay per stencil offset, in dt steps.
+
+        delay = 1 step (synaptic) + r / v_axon, quantized, clipped to d_max-1.
+        """
+        off = self.stencil_offsets()
+        r = self.alpha_um * np.hypot(off[:, 0], off[:, 1])
+        d = 1.0 + r / v_axon_um_per_ms / dt_ms
+        return np.clip(np.round(d).astype(np.int32), 1, d_max - 1)
+
+    def expected_remote_fanout(self, n_per_column: int = NEURONS_PER_COLUMN) -> float:
+        """Expected remote synapses projected by one *excitatory* neuron
+        sitting in the interior of an infinite grid."""
+        return float(self.offset_probs().sum() * n_per_column)
+
+
+def gaussian_law() -> ConnectivityLaw:
+    """Paper's short-range law: A=0.05, sigma=100um -> 7x7 stencil."""
+    return ConnectivityLaw(kind="gaussian", amplitude=0.05, scale_um=100.0)
+
+
+def exponential_law() -> ConnectivityLaw:
+    """Paper's long-range law: A=0.03, lambda=290um -> 21x21 stencil."""
+    return ConnectivityLaw(kind="exponential", amplitude=0.03, scale_um=290.0)
+
+
+def expected_synapse_counts(
+    law: ConnectivityLaw,
+    grid_h: int,
+    grid_w: int,
+    n_per_column: int = NEURONS_PER_COLUMN,
+    frac_exc: float = FRAC_EXCITATORY,
+    p_local: float = P_LOCAL,
+    external_per_neuron: int = EXTERNAL_SYNAPSES,
+) -> dict:
+    """Exact expected synapse counts for a finite grid (with edge effects).
+
+    Reproduces the paper's Table 1.  Local synapses: every neuron projects
+    to every same-column neuron with p_local.  Remote synapses: every
+    *excitatory* neuron projects to every neuron of each stencil column
+    (inside the grid) with p(r).
+    """
+    n_cols = grid_h * grid_w
+    n_neurons = n_cols * n_per_column
+    n_exc_per_col = int(round(frac_exc * n_per_column))
+
+    local = n_cols * n_per_column * p_local * n_per_column
+
+    # Edge-aware remote count: for each offset, the number of (source col,
+    # target col) pairs inside the grid is (H-|dy|)*(W-|dx|).
+    off = law.stencil_offsets()
+    probs = law.offset_probs()
+    pairs = (np.maximum(grid_h - np.abs(off[:, 0]), 0)
+             * np.maximum(grid_w - np.abs(off[:, 1]), 0)).astype(np.float64)
+    remote = float((pairs * probs).sum() * n_exc_per_col * n_per_column)
+
+    recurrent = local + remote
+    external = float(n_neurons * external_per_neuron)
+    return {
+        "grid": (grid_h, grid_w),
+        "columns": n_cols,
+        "neurons": n_neurons,
+        "local_synapses": local,
+        "remote_synapses": remote,
+        "recurrent_synapses": recurrent,
+        "external_synapses": external,
+        "total_synapses": recurrent + external,
+        "recurrent_per_neuron": recurrent / n_neurons,
+        "remote_per_neuron": remote / n_neurons,
+        "stencil_width": law.stencil_width,
+    }

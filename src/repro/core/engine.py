@@ -1,0 +1,227 @@
+"""Single-shard DPSNN engine: time-driven outer loop, event-driven delivery.
+
+One engine instance simulates one tile of the column grid.  The
+distributed engine (``dist_engine.py``) runs this per-shard body inside a
+``shard_map`` with a halo exchange supplying remote spikes.
+
+Step structure (dt = 1 ms):
+
+  1. read the delayed-current ring slot for t, add external Poisson drive
+  2. LIF+SFA update -> spikes
+  3. zero the consumed ring slot
+  4. deliver local+halo spikes through the synapse tables into future
+     ring slots (event mode: cost ~ spikes x fan-out = synaptic events)
+
+State is a pytree; ``run`` is a ``lax.scan`` and jit-compatible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .connectivity import (ConnectivityLaw, EXTERNAL_RATE_HZ,
+                           EXTERNAL_SYNAPSES)
+from .grid import TileDecomposition
+from .neuron import LIFParams, init_state, lif_sfa_step
+from .synapses import (SynapseTableSpec, build_tables, deliver_events,
+                       deliver_gather_all)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    decomp: TileDecomposition
+    law: ConnectivityLaw
+    lif: LIFParams = LIFParams()
+    d_ring: int = 8
+    mode: str = "event"              # "event" | "gather_all"
+    ext_synapses: int = EXTERNAL_SYNAPSES
+    ext_rate_hz: float = EXTERNAL_RATE_HZ
+    rate_cap_hz: float = 100.0
+    cap_headroom: float = 8.0        # event-list sizing (perf knob)
+    seed: int = 0
+    weight_dtype: str = "float32"
+    use_kernels: bool = False        # route LIF/accum through Pallas kernels
+    stdp: object = None              # Optional[STDPParams]; plastic when set
+
+    def spec(self) -> SynapseTableSpec:
+        single = self.decomp.tiles_y == 1 and self.decomp.tiles_x == 1
+        return SynapseTableSpec(
+            decomp=self.decomp, law=self.law, d_ring=self.d_ring,
+            dt_ms=self.lif.dt_ms, rate_cap_hz=self.rate_cap_hz,
+            cap_headroom=self.cap_headroom,
+            weight_dtype=self.weight_dtype, single_shard=single)
+
+
+def init_sim_state(cfg: EngineConfig, tile_y: int = 0, tile_x: int = 0,
+                   seed_offset: int = 0) -> dict:
+    spec = cfg.spec()
+    n_local = spec.n_local
+    rng = np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, 7 + seed_offset, tile_y, tile_x]))
+    neuron = init_state(n_local, cfg.lif, rng)
+    active_cols = cfg.decomp.active_mask(tile_y, tile_x).ravel()
+    active = np.repeat(active_cols, cfg.decomp.grid.n_per_column)
+    return {
+        "neuron": neuron,
+        "i_ring": jnp.zeros((cfg.d_ring, n_local), dtype=jnp.float32),
+        "t": jnp.zeros((), dtype=jnp.int32),
+        "rng": jax.random.PRNGKey(cfg.seed + 1000 * seed_offset
+                                  + 17 * tile_y + tile_x),
+        "active": jnp.asarray(active),
+        "metrics": {
+            "spikes": jnp.zeros((), jnp.float32),
+            "events": jnp.zeros((), jnp.float32),
+            "dropped": jnp.zeros((), jnp.float32),
+        },
+    }
+
+
+def build_shard_tables(cfg: EngineConfig, tile_y: int = 0,
+                       tile_x: int = 0) -> dict:
+    spec = cfg.spec()
+    return build_tables(spec, tile_y, tile_x, j_exc=cfg.lif.j_exc_mv,
+                        j_inh=cfg.lif.j_inh_mv, seed=cfg.seed)
+
+
+def external_drive(rng_key, n_local: int, cfg: EngineConfig):
+    """Poisson thalamo-cortical drive: ext_synapses firing at ext_rate."""
+    lam = cfg.ext_synapses * cfg.ext_rate_hz * 1e-3 * cfg.lif.dt_ms
+    events = jax.random.poisson(rng_key, lam, (n_local,))
+    return events.astype(jnp.float32) * cfg.lif.j_ext_mv
+
+
+def step(state: dict, tables: dict, cfg: EngineConfig,
+         halo_band_spikes: Optional[list] = None):
+    """One simulation step.
+
+    ``halo_band_spikes``: list of per-band (rows_b,) spike vectors for the
+    halo excitatory sources this step (None when running single-shard).
+    Returns (new_state, local_spikes).
+    """
+    spec = cfg.spec()
+    n_local = spec.n_local
+    key, k_ext = jax.random.split(state["rng"])
+    slot = state["t"] % cfg.d_ring
+
+    i_now = state["i_ring"][slot] + external_drive(k_ext, n_local, cfg)
+    if cfg.use_kernels:
+        from ..kernels import ops as kops
+        neuron, spikes = kops.lif_step(state["neuron"], i_now, cfg.lif,
+                                       state["active"])
+    else:
+        neuron, spikes = lif_sfa_step(state["neuron"], i_now, cfg.lif,
+                                      state["active"])
+
+    i_ring = state["i_ring"].at[slot].set(0.0)
+
+    bands = spec.halo_bands()
+    halo_band_spikes = halo_band_spikes or []
+    metrics = state["metrics"]
+    if cfg.mode == "event":
+        if cfg.use_kernels:
+            from ..kernels import ops as kops
+            deliver = kops.synaptic_accum_events
+        else:
+            deliver = deliver_events
+        i_ring, ev, dr = deliver(
+            tables["local"], spikes, i_ring, slot, cfg.d_ring,
+            spec.active_cap_local)
+        ev = ev.astype(jnp.float32)
+        dr = dr.astype(jnp.float32)
+        for band, tab, spk in zip(bands, tables["halo"], halo_band_spikes):
+            i_ring, ev_b, dr_b = deliver(
+                tab, spk, i_ring, slot, cfg.d_ring,
+                spec.active_cap_band(band))
+            ev = ev + ev_b.astype(jnp.float32)
+            dr = dr + dr_b.astype(jnp.float32)
+        metrics = {
+            "spikes": metrics["spikes"] + jnp.sum(spikes),
+            "events": metrics["events"] + ev,
+            "dropped": metrics["dropped"] + dr,
+        }
+    elif cfg.mode == "gather_all":
+        i_ring = deliver_gather_all(tables["local"], spikes, i_ring, slot,
+                                    cfg.d_ring)
+        nnz_l = tables["local"]["nnz"][:n_local].astype(jnp.float32)
+        ev = jnp.sum(nnz_l * spikes)
+        for tab, spk in zip(tables["halo"], halo_band_spikes):
+            i_ring = deliver_gather_all(tab, spk, i_ring, slot, cfg.d_ring)
+            nnz_h = tab["nnz"][:-1].astype(jnp.float32)
+            ev = ev + jnp.sum(nnz_h * spk)
+        metrics = {
+            "spikes": metrics["spikes"] + jnp.sum(spikes),
+            "events": metrics["events"] + ev,
+            "dropped": metrics["dropped"],
+        }
+    else:
+        raise ValueError(f"unknown mode {cfg.mode}")
+
+    new_state = {
+        "neuron": neuron, "i_ring": i_ring, "t": state["t"] + 1,
+        "rng": key, "active": state["active"], "metrics": metrics,
+    }
+    return new_state, spikes
+
+
+def run(state: dict, tables: dict, cfg: EngineConfig, n_steps: int,
+        record_spikes: bool = False):
+    """Scan ``n_steps`` of single-shard simulation (no halo sources)."""
+
+    def body(carry, _):
+        new_state, spikes = step(carry, tables, cfg, halo_band_spikes=None)
+        out = spikes if record_spikes else jnp.sum(spikes)
+        return new_state, out
+
+    return jax.lax.scan(body, state, None, length=n_steps)
+
+
+def run_plastic(state: dict, tables: dict, stdp_aux: dict,
+                cfg: EngineConfig, n_steps: int):
+    """Scan with STDP enabled: synapse tables join the carry.
+
+    ``stdp_aux`` comes from ``init_plasticity`` (inverse index, masks,
+    trace state).  Single-shard only (tables have no halo tiers).
+    """
+    from .stdp import stdp_step
+
+    spec = cfg.spec()
+
+    def body(carry, _):
+        st, tabs, traces = carry
+        new_state, spikes = step(st, tabs, cfg, halo_band_spikes=None)
+        tiers, traces = stdp_step(
+            [tabs["local"]], stdp_aux["masks"], stdp_aux["inv"], traces,
+            [spikes], spikes, cfg.stdp,
+            [spec.active_cap_local], spec.active_cap_local)
+        tabs = dict(tabs, local=tiers[0])
+        return (new_state, tabs, traces), jnp.sum(spikes)
+
+    return jax.lax.scan(body, (state, tables, stdp_aux["traces"]), None,
+                        length=n_steps)
+
+
+def init_plasticity(tables: dict, cfg: EngineConfig) -> dict:
+    """Build the STDP auxiliaries (inverse index, plastic masks, traces)."""
+    from .stdp import build_inverse_index, init_stdp_state, plastic_masks
+
+    tiers = [tables["local"]]
+    n_local = cfg.spec().n_local
+    return {
+        "inv": build_inverse_index(tiers, n_local),
+        "masks": plastic_masks(tiers),
+        "traces": init_stdp_state(tiers, n_local),
+    }
+
+
+def firing_rate_hz(state: dict, cfg: EngineConfig, n_steps: int) -> float:
+    """Mean firing rate over the simulated window (active neurons only)."""
+    n_active = float(np.asarray(jnp.sum(state["active"])))
+    spikes = float(np.asarray(state["metrics"]["spikes"]))
+    sim_sec = n_steps * cfg.lif.dt_ms * 1e-3
+    return spikes / max(n_active, 1.0) / max(sim_sec, 1e-9)

@@ -1,0 +1,148 @@
+"""Metrics of the paper: cost per synaptic event, bytes per synapse,
+firing rates, and the analytic strong-scaling model used to project the
+measured reduced-scale behaviour to the full problem sizes.
+
+The paper's headline unit is::
+
+    cost = elapsed_sec / (simulated_sec * total_synapses * firing_rate)
+
+i.e. seconds of wall clock per *synaptic event* (one spike crossing one
+synapse).  It makes runs of different size/rate directly comparable
+(paper Figs. 1-2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from .connectivity import ConnectivityLaw, EXTERNAL_RATE_HZ
+from .grid import TileDecomposition
+from .synapses import SynapseTableSpec
+
+
+def cost_per_synaptic_event(elapsed_s: float, simulated_s: float,
+                            total_synapses: float, rate_hz: float) -> float:
+    """Paper's Figure-1 metric (elapsed sec per synaptic event)."""
+    events = simulated_s * total_synapses * rate_hz
+    return elapsed_s / max(events, 1e-30)
+
+
+def speedup_efficiency(cost_1: float, cost_n: float, n: int) -> float:
+    """Fraction of ideal strong-scaling speedup reached at n processes."""
+    return (cost_1 / cost_n) / n
+
+
+def time_fn(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall time of ``fn(*args)`` with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+# ---------------------------------------------------------------------------
+# Memory accounting (paper Fig. 3: bytes / synapse)
+# ---------------------------------------------------------------------------
+
+def shard_memory_bytes(spec: SynapseTableSpec) -> dict:
+    """Exact per-shard buffer bytes (tables + neuron state + rings)."""
+    n_local = spec.n_local
+    table = spec.table_bytes()
+    neuron = n_local * (4 + 4 + 4)          # v, c, refrac
+    ring = spec.d_ring * n_local * 4        # delayed-current ring
+    active = n_local * 1
+    return {"tables": table, "neuron_state": neuron, "ring": ring,
+            "active_mask": active,
+            "total": table + neuron + ring + active}
+
+
+def bytes_per_synapse(spec: SynapseTableSpec) -> float:
+    """Analytic bytes/synapse of one interior shard (paper Fig. 3)."""
+    mem = shard_memory_bytes(spec)
+    return mem["total"] / max(spec.expected_synapses(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Analytic strong-scaling model (projects full-scale behaviour on the
+# target TPU hardware from roofline constants; see benchmarks/fig1).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """TPU v5e-class constants (per chip)."""
+
+    peak_flops: float = 197e12        # bf16 FLOP/s
+    hbm_bw: float = 819e9             # B/s
+    ici_bw: float = 50e9              # B/s per link
+    flops_per_event: float = 4.0      # gather w, add to ring (fused)
+    bytes_per_event: float = 12.0     # (tgt,w,dslot) read + ring RMW
+    bytes_per_neuron_step: float = 24.0   # LIF state RMW (fused kernel)
+
+
+def step_time_model(spec: SynapseTableSpec, rate_hz: float,
+                    hw: HardwareModel = HardwareModel(),
+                    pack_spikes: bool = True,
+                    ext_rate_hz: float = EXTERNAL_RATE_HZ,
+                    ext_synapses: int = 540) -> dict:
+    """Roofline step-time terms for one shard at the given firing rate.
+
+    Events per step per shard = stored synapses x rate x dt; halo bytes
+    from the exact strip volume.  Returns seconds per simulated step.
+    """
+    d = spec.decomp
+    dt_s = spec.dt_ms * 1e-3
+    syn = spec.expected_synapses()
+    events = syn * rate_hz * dt_s
+    ext_events = spec.n_local * ext_synapses * ext_rate_hz * dt_s
+
+    compute = (events + ext_events) * hw.flops_per_event / hw.peak_flops
+    memory = ((events + ext_events) * hw.bytes_per_event
+              + spec.n_local * hw.bytes_per_neuron_step) / hw.hbm_bw
+    payload = (spec.n_exc_per_col + 7) // 8 if pack_spikes \
+        else spec.n_exc_per_col * 4
+    halo_cols = d.region_cols - d.tile_cols
+    collective = halo_cols * payload / hw.ici_bw
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective,
+            "step_s": max(compute, memory) + collective,
+            "events_per_step": events}
+
+
+def strong_scaling_curve(grid_h: int, grid_w: int, law: ConnectivityLaw,
+                         shard_counts, rate_hz: float,
+                         n_per_column: int,
+                         hw: HardwareModel = HardwareModel(),
+                         pack_spikes: bool = True) -> list:
+    """Analytic cost-per-synaptic-event vs #shards (paper Fig. 1 shape)."""
+    from .grid import ColumnGrid
+    rows = []
+    for n in shard_counts:
+        ty = int(np.sqrt(n))
+        while n % ty:
+            ty -= 1
+        tx = n // ty
+        dec = TileDecomposition(grid=ColumnGrid(grid_h, grid_w, n_per_column),
+                                tiles_y=ty, tiles_x=tx, radius=law.radius)
+        spec = SynapseTableSpec(decomp=dec, law=law,
+                                single_shard=(n == 1))
+        t = step_time_model(spec, rate_hz, hw, pack_spikes)
+        events_total = t["events_per_step"] * n
+        rows.append({
+            "shards": n, "tiles": (ty, tx),
+            "step_s": t["step_s"],
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            # all shards step concurrently: wall time per step = step_s,
+            # global events per step = events_per_step * n
+            "cost_per_event": t["step_s"] / max(events_total, 1e-30),
+        })
+    return rows

@@ -1,0 +1,87 @@
+"""Leaky Integrate-and-Fire neuron with Spike-Frequency Adaptation.
+
+Model (Gigante, Mattia, Del Giudice 2007 form, discretized at dt):
+
+    V[t+1] = V_rest + (V[t] - V_rest) * exp(-dt/tau_m)
+             + I_syn + I_ext - g_sfa * c[t] * dt        (if not refractory)
+    c[t+1] = c[t] * exp(-dt/tau_c) + alpha_c * spiked
+    spike  : V >= theta  ->  V <- V_reset, refractory for tau_arp
+
+Synaptic inputs are delta-currents (instantaneous membrane jumps, in mV),
+as in the Perseo/DPSNN lineage.  All state is float32 except the
+refractory counter (int32).  Shapes are flat (n_neurons,).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFParams:
+    dt_ms: float = 1.0
+    tau_m_ms: float = 20.0      # membrane time constant
+    v_rest_mv: float = 0.0
+    v_reset_mv: float = 0.0
+    theta_mv: float = 20.0      # firing threshold
+    tau_arp_ms: float = 2.0     # absolute refractory period
+    tau_c_ms: float = 120.0     # SFA time constant
+    alpha_c: float = 1.0        # SFA increment per spike
+    g_sfa: float = 0.025        # SFA conductance (mV per unit c per ms)
+    # synaptic efficacies (delta-current jumps, mV)
+    j_exc_mv: float = 0.35
+    j_inh_mv: float = -1.6      # ~4.5x exc (inhibition-dominated balance)
+    j_ext_mv: float = 0.50
+
+    @property
+    def leak_decay(self) -> float:
+        return float(np.exp(-self.dt_ms / self.tau_m_ms))
+
+    @property
+    def sfa_decay(self) -> float:
+        return float(np.exp(-self.dt_ms / self.tau_c_ms))
+
+    @property
+    def refrac_steps(self) -> int:
+        return int(round(self.tau_arp_ms / self.dt_ms))
+
+
+def init_state(n: int, params: LIFParams, rng: np.random.Generator | None = None):
+    """Initial membrane state; small voltage jitter to break symmetry."""
+    rng = rng or np.random.default_rng(0)
+    v0 = rng.uniform(params.v_rest_mv, 0.5 * params.theta_mv, size=n)
+    return {
+        "v": jnp.asarray(v0, dtype=jnp.float32),
+        "c": jnp.zeros((n,), dtype=jnp.float32),
+        "refrac": jnp.zeros((n,), dtype=jnp.int32),
+    }
+
+
+def lif_sfa_step(state: dict, i_total_mv, params: LIFParams,
+                 active_mask=None):
+    """One dt update.  ``i_total_mv`` is the summed synaptic + external
+    delta-current for this step (mV).  Returns (new_state, spikes f32)."""
+    v, c, refrac = state["v"], state["c"], state["refrac"]
+    p = params
+
+    refractory = refrac > 0
+    v_int = (p.v_rest_mv + (v - p.v_rest_mv) * p.leak_decay
+             + i_total_mv - p.g_sfa * c * p.dt_ms)
+    v_new = jnp.where(refractory, p.v_reset_mv, v_int)
+
+    spiked = v_new >= p.theta_mv
+    if active_mask is not None:
+        spiked = jnp.logical_and(spiked, active_mask)
+
+    v_new = jnp.where(spiked, p.v_reset_mv, v_new)
+    c_new = c * p.sfa_decay + p.alpha_c * spiked.astype(jnp.float32)
+    refrac_new = jnp.where(
+        spiked, jnp.int32(p.refrac_steps),
+        jnp.maximum(refrac - 1, 0).astype(jnp.int32))
+
+    new_state = {"v": v_new.astype(jnp.float32), "c": c_new,
+                 "refrac": refrac_new}
+    return new_state, spiked.astype(jnp.float32)

@@ -1,0 +1,171 @@
+"""Spike-timing-dependent plasticity (the "P" in DPSNN).
+
+Pair-based STDP with exponential traces, applied event-driven on the
+source-major synapse tables:
+
+  * every step:  x_pre <- x_pre * exp(-dt/tau+) + pre_spike
+                 x_post <- x_post * exp(-dt/tau-) + post_spike
+  * LTD, at pre-spike time: for each spiking source row (event-compacted,
+    same compaction as delivery), every synapse in the row depresses by
+    ``a_minus * x_post[target]``.
+  * LTP, at post-spike time: for each spiking target, every *incoming*
+    synapse potentiates by ``a_plus * x_pre[source row]``.  Incoming
+    synapses are reached through a target-major *inverse index* built
+    once at table-construction time (flat "virtual slot" pointers into
+    the tiered tables).
+
+Only excitatory synapses are plastic (mask fixed at build time; DPSNN's
+convention).  Weights clamp to [0, w_max].
+
+The inverse index adds 4 B/synapse when plasticity is enabled; it is the
+TPU-shaped replacement for DPSNN's target-side synapse lists, which give
+the CPU code LTP access for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class STDPParams:
+    tau_plus_ms: float = 20.0
+    tau_minus_ms: float = 20.0
+    a_plus: float = 0.005        # LTP amplitude (mV of efficacy per pair)
+    a_minus: float = 0.00525     # LTD amplitude (slightly dominant)
+    w_max: float = 1.0
+    dt_ms: float = 1.0
+
+    @property
+    def decay_plus(self) -> float:
+        return float(math.exp(-self.dt_ms / self.tau_plus_ms))
+
+    @property
+    def decay_minus(self) -> float:
+        return float(math.exp(-self.dt_ms / self.tau_minus_ms))
+
+
+def _tier_sizes(tiers: Sequence[dict]) -> Tuple[np.ndarray, np.ndarray]:
+    sizes = np.array([int(np.prod(t["tgt"].shape)) for t in tiers])
+    bases = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    return bases, sizes
+
+
+def build_inverse_index(tiers: Sequence[dict], n_targets: int,
+                        cap_pad: float = 1.3) -> dict:
+    """Target-major index over all tiers (host-side, numpy).
+
+    Returns dict with:
+      ``slots``  -- (n_targets, K_in) int32 virtual flat slots, padded
+                    with ``total_size`` (a sentinel beyond every tier);
+      ``n_in``   -- (n_targets,) int32 actual in-degree (clipped to K_in);
+      ``bases``  -- per-tier virtual base offsets.
+    """
+    bases, sizes = _tier_sizes(tiers)
+    total = int(bases[-1] + sizes[-1]) if len(sizes) else 0
+    per_target: List[List[int]] = [[] for _ in range(n_targets)]
+    clipped = 0
+    for t, base in zip(tiers, bases):
+        tgt = np.asarray(t["tgt"])
+        nnz = np.asarray(t["nnz"])
+        rows, cap = tgt.shape
+        k = np.arange(cap)[None, :]
+        valid = k < nnz[:, None]
+        rr, kk = np.nonzero(valid)
+        vslots = base + rr * cap + kk
+        for tgt_n, v in zip(tgt[rr, kk], vslots):
+            per_target[int(tgt_n)].append(int(v))
+    mean_in = max(1.0, sum(len(p) for p in per_target) / max(n_targets, 1))
+    k_in = int(math.ceil(cap_pad * max(mean_in, max(
+        (len(p) for p in per_target), default=1))))
+    slots = np.full((n_targets, k_in), total, dtype=np.int32)
+    n_in = np.zeros((n_targets,), dtype=np.int32)
+    for n, p in enumerate(per_target):
+        take = min(len(p), k_in)
+        clipped += len(p) - take
+        slots[n, :take] = p[:take]
+        n_in[n] = take
+    return {"slots": jnp.asarray(slots), "n_in": jnp.asarray(n_in),
+            "bases": bases, "sizes": sizes, "total": total,
+            "clipped": clipped}
+
+
+def init_stdp_state(tiers: Sequence[dict], n_local: int) -> dict:
+    return {
+        "x_pre": [jnp.zeros((t["tgt"].shape[0],), jnp.float32)
+                  for t in tiers],
+        "x_post": jnp.zeros((n_local,), jnp.float32),
+    }
+
+
+def plastic_masks(tiers: Sequence[dict]) -> list:
+    """Excitatory (w>0 at build time) synapses are plastic."""
+    return [(t["w"] > 0).astype(t["w"].dtype) for t in tiers]
+
+
+def stdp_step(tiers: Sequence[dict], masks: Sequence[jnp.ndarray],
+              inv: dict, state: dict,
+              spike_tiers: Sequence[jnp.ndarray],
+              spikes_local: jnp.ndarray,
+              params: STDPParams,
+              pre_caps: Sequence[int], post_cap: int):
+    """One STDP update.  Returns (new_tiers, new_state).
+
+    ``spike_tiers[i]`` is the (rows_i,) pre-spike vector of tier i (the
+    same vectors delivery used); ``spikes_local`` the (n_local,) post
+    spikes of this step.
+    """
+    p = params
+    new_tiers = [dict(t) for t in tiers]
+
+    # ---- traces (decay first: updates see *previous* activity) ---------
+    x_pre = [xp * p.decay_plus for xp in state["x_pre"]]
+    x_post = state["x_post"] * p.decay_minus
+
+    # ---- LTD: pre spike => depress by post trace -----------------------
+    for i, (t, mask, spk, cap) in enumerate(
+            zip(tiers, masks, spike_tiers, pre_caps)):
+        n_rows = t["tgt"].shape[0] - 1
+        (rows,) = jnp.nonzero(spk[:n_rows] > 0, size=cap,
+                              fill_value=n_rows)
+        tgt_rows = t["tgt"][rows]                    # (cap_a, cap)
+        dw = -p.a_minus * x_post[tgt_rows] * mask[rows]
+        w = new_tiers[i]["w"].at[rows].add(dw.astype(t["w"].dtype))
+        new_tiers[i]["w"] = jnp.clip(
+            jnp.where(mask > 0, w, new_tiers[i]["w"]), None, p.w_max)
+
+    # ---- LTP: post spike => potentiate incoming by pre trace -----------
+    n_local = spikes_local.shape[0]
+    (tgts,) = jnp.nonzero(spikes_local > 0, size=post_cap,
+                          fill_value=n_local)
+    safe_tgts = jnp.minimum(tgts, n_local - 1)
+    live = (tgts < n_local)[:, None]
+    vslots = jnp.where(live, inv["slots"][safe_tgts], inv["total"])
+    for i, (t, mask) in enumerate(zip(tiers, masks)):
+        base, size = int(inv["bases"][i]), int(inv["sizes"][i])
+        cap = t["tgt"].shape[1]
+        sel = (vslots >= base) & (vslots < base + size)
+        local_v = jnp.where(sel, vslots - base, 0)
+        rows, ks = local_v // cap, local_v % cap
+        dw = jnp.where(sel, p.a_plus * x_pre[i][rows] * mask[rows, ks], 0.0)
+        w = new_tiers[i]["w"].at[rows.ravel(), ks.ravel()].add(
+            dw.ravel().astype(t["w"].dtype))
+        new_tiers[i]["w"] = jnp.clip(w, None, p.w_max)
+
+    # final clamp to [0, w_max] on plastic synapses
+    for i, mask in enumerate(masks):
+        w = new_tiers[i]["w"]
+        new_tiers[i]["w"] = jnp.where(
+            mask > 0, jnp.clip(w, 0.0, p.w_max), w)
+
+    # ---- trace increments ----------------------------------------------
+    x_pre = [xp.at[: spk.shape[0]].add(spk)
+             for xp, spk in zip(x_pre, spike_tiers)]
+    new_state = {"x_pre": x_pre, "x_post": x_post + spikes_local}
+    return new_tiers, new_state

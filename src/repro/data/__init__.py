@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipelines."""
+
+from .pipeline import (LMBatchPipeline, make_batch_specs, host_shard_slice)

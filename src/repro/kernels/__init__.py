@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots, each with a pure-jnp
+oracle in ref.py and a jit'd wrapper in ops.py:
+
+  * lif_step        -- fused memory-bound neuron update
+  * synaptic_accum  -- event gather -> VMEM scatter-add (the paper's hot loop)
+  * flash_attention -- blocked online-softmax attention (LM prefill)
+"""
+
+from . import ops, ref

@@ -1,0 +1,82 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Backend switch: on TPU the kernels run compiled (``interpret=False``); on
+CPU (this container, and any test environment) they run in interpret
+mode, which executes the kernel bodies with jnp ops -- bit-identical
+semantics, same BlockSpec tiling, no Mosaic.  ``impl='ref'`` routes to
+the pure-jnp oracles (used by the dry-run so the lowered HLO stays clean
+for roofline accounting).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .lif_step import lif_step_pallas
+from .synaptic_accum import synaptic_accum_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _lif_kwargs(params) -> dict:
+    return dict(leak_decay=params.leak_decay, sfa_decay=params.sfa_decay,
+                g_sfa=params.g_sfa, dt_ms=params.dt_ms,
+                v_rest=params.v_rest_mv, v_reset=params.v_reset_mv,
+                theta=params.theta_mv, alpha_c=params.alpha_c,
+                refrac_steps=params.refrac_steps)
+
+
+def lif_step(state: dict, i_total, params, active=None):
+    """Kernel-backed drop-in for ``core.neuron.lif_sfa_step``."""
+    a = active if active is not None else jnp.ones_like(state["v"],
+                                                        dtype=bool)
+    v, c, r, spk = lif_step_pallas(
+        state["v"], state["c"], state["refrac"], i_total, a,
+        interpret=_interpret(), **_lif_kwargs(params))
+    return {"v": v, "c": c, "refrac": r}, spk
+
+
+def lif_step_ref(state: dict, i_total, params, active=None):
+    a = active if active is not None else jnp.ones_like(state["v"],
+                                                        dtype=bool)
+    v, c, r, spk = ref.lif_step_ref(
+        state["v"], state["c"], state["refrac"], i_total, a,
+        **_lif_kwargs(params))
+    return {"v": v, "c": c, "refrac": r}, spk
+
+
+def synaptic_accum_events(tables: dict, spikes_src, i_ring, t_slot,
+                          d_ring: int, active_cap: int):
+    """Kernel-backed drop-in for ``core.synapses.deliver_events``."""
+    tgt, w, dslot, nnz = (tables["tgt"], tables["w"], tables["dslot"],
+                          tables["nnz"])
+    n_rows = tgt.shape[0] - 1
+    spk = spikes_src[:n_rows]
+    (idx,) = jnp.nonzero(spk > 0, size=active_cap, fill_value=n_rows)
+    i_ring = synaptic_accum_pallas(idx, t_slot, tgt, w, dslot, i_ring,
+                                   interpret=_interpret())
+    n_spikes = jnp.sum(spk > 0)
+    n_events = jnp.sum(nnz[idx])
+    n_dropped = jnp.maximum(n_spikes - active_cap, 0)
+    return i_ring, n_events, n_dropped
+
+
+def attention(q, k, v, *, causal=True, window=None, scale=None, q_offset=0,
+              impl: str = "auto", block_q: int = 128, block_k: int = 128):
+    """Multi-head attention with GQA; impl in {auto, pallas, ref}.
+
+    'auto' = pallas (compiled on TPU, interpreted elsewhere).
+    """
+    if impl == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 scale=scale, q_offset=q_offset)
+    return _flash(q, k, v, causal=causal, window=window, scale=scale,
+                  q_offset=q_offset, block_q=block_q, block_k=block_k,
+                  interpret=_interpret())

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantics of record: each kernel's sweep test asserts
+``assert_allclose(kernel(x), ref(x))`` over shapes and dtypes.  They are
+also the fallback implementation path on backends without Pallas.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# LIF + SFA fused neuron update (kernels/lif_step.py)
+# ---------------------------------------------------------------------------
+
+def lif_step_ref(v, c, refrac, i_total, active, *, leak_decay, sfa_decay,
+                 g_sfa, dt_ms, v_rest, v_reset, theta, alpha_c,
+                 refrac_steps):
+    refractory = refrac > 0
+    v_int = v_rest + (v - v_rest) * leak_decay + i_total - g_sfa * c * dt_ms
+    v_new = jnp.where(refractory, v_reset, v_int)
+    spiked = jnp.logical_and(v_new >= theta, active)
+    v_new = jnp.where(spiked, v_reset, v_new)
+    spk_f = spiked.astype(jnp.float32)
+    c_new = c * sfa_decay + alpha_c * spk_f
+    refrac_new = jnp.where(spiked, jnp.int32(refrac_steps),
+                           jnp.maximum(refrac - 1, 0)).astype(jnp.int32)
+    return v_new.astype(v.dtype), c_new.astype(c.dtype), refrac_new, spk_f
+
+
+# ---------------------------------------------------------------------------
+# Event-driven synaptic accumulation (kernels/synaptic_accum.py)
+# ---------------------------------------------------------------------------
+
+def synaptic_accum_ref(idx, t_slot, tgt, w, dslot, ring):
+    """Deliver the rows listed in ``idx`` into the delay ring.
+
+    idx: (A,) int32 row indices (padding rows point at the all-zero sink
+    row ``tgt.shape[0]-1``); ring: (D, n_local) f32.
+    """
+    d_ring = ring.shape[0]
+    rows_t = tgt[idx]
+    rows_w = w[idx].astype(jnp.float32)
+    rows_d = dslot[idx].astype(jnp.int32)
+    slots = (t_slot + rows_d) % d_ring
+    return ring.at[slots.ravel(), rows_t.ravel()].add(rows_w.ravel())
+
+
+# ---------------------------------------------------------------------------
+# Blocked online-softmax attention (kernels/flash_attention.py)
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None,
+                  q_offset=0):
+    """Masked multi-head attention oracle.
+
+    q: (BH, Sq, D); k, v: (BH_kv, Sk, D) with BH % BH_kv == 0 (GQA --
+    query-head block bh uses kv head bh // (BH // BH_kv)).
+    ``window``: sliding-window width (keys with q_pos - k_pos >= window
+    masked out); ``q_offset``: absolute position of q[0] (decode).
+    """
+    bh, sq, d = q.shape
+    bh_kv = k.shape[0]
+    group = bh // bh_kv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    kk = jnp.repeat(k, group, axis=0)
+    vv = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows -> 0
+    return jnp.einsum("bqk,bkd->bqd", p, vv).astype(q.dtype)

@@ -1,0 +1,47 @@
+"""Production mesh definition.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before any
+device query).
+
+  single pod:  (16, 16)    axes ("data", "model")   = 256 chips
+  multi  pod:  (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+LM models: ("pod","data") shard batch (DP; FSDP stays intra-pod),
+"model" shards heads/ffn/experts/vocab/cache-seq (TP/EP).  The SNN maps
+("pod","data") x "model" to the spatial (y, x) tile grid of cortical
+columns -- the pod axis adds more tile rows, like adding MPI ranks.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=None, axes=("data", "model")):
+    """Small mesh over however many host devices exist (tests/examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        m = 1
+        while m * 2 <= n // (m * 2) * (m * 2) and (m * 2) ** 2 <= n:
+            m *= 2
+        while n % m:
+            m //= 2
+        shape = (n // m, m)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

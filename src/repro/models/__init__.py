@@ -1,0 +1,7 @@
+"""LM-family model stack covering all 10 assigned architectures."""
+
+from .config import ModelConfig, ShapeConfig, SHAPES
+from .model import (loss_fn, make_train_step, make_eval_step, make_prefill,
+                    make_serve_step, input_specs, abstract_params,
+                    abstract_decode_state)
+from .transformer import init_model, abstract_model, forward, init_decode_state

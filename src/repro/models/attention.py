@@ -1,0 +1,406 @@
+"""GQA attention: train/prefill (chunked online-softmax or Pallas flash)
+and decode (KV cache, optionally ring-buffered for sliding windows).
+
+GQA never materializes repeated KV: queries are reshaped to
+``(B, Kv, group, S, D)`` so the head grouping is an einsum broadcast.
+
+Sharding: q heads shard over "heads" (TP) when divisible, KV heads
+replicate (small); decode KV caches shard their *sequence* dim over the
+model axis ("kv_seq"), so decode attention becomes a flash-decoding
+pattern -- per-shard partial softmax combined by the psum GSPMD inserts.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import MeshRules, constrain
+from .config import ModelConfig
+from .layers import _normal, apply_rmsnorm, apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False):
+    d, h, kv, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.resolved_head_dim)
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d)
+    p = {
+        "wq": _normal(ks[0], (d, h, hd), sc, dtype),
+        "wk": _normal(ks[1], (d, kv, hd), sc, dtype),
+        "wv": _normal(ks[2], (d, kv, hd), sc, dtype),
+        "wo": _normal(ks[3], (h, hd, d), 1.0 / math.sqrt(h * hd), dtype),
+    }
+    s = {
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", "kv_heads", None),
+        "wv": ("fsdp", "kv_heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+    if cfg.qkv_bias and not cross:
+        p.update(bq=jnp.zeros((h, hd), dtype), bk=jnp.zeros((kv, hd), dtype),
+                 bv=jnp.zeros((kv, hd), dtype))
+        s.update(bq=("heads", None), bk=("kv_heads", None),
+                 bv=("kv_heads", None))
+    if cfg.qk_norm:
+        p.update(q_norm=jnp.zeros((hd,), dtype),
+                 k_norm=jnp.zeros((hd,), dtype))
+        s.update(q_norm=(None,), k_norm=(None,))
+    return p, s
+
+
+import dataclasses
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    k: jnp.ndarray           # (B, S_cache, Kv, D)
+    v: jnp.ndarray
+    # static: sliding-window ring buffer flag (not a traced leaf)
+    ring: bool = dataclasses.field(default=False,
+                                   metadata=dict(static=True))
+
+
+def _project_qkv(p, cfg: ModelConfig, x, kv_x, positions, kv_positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = apply_rmsnorm({"scale": p["q_norm"]}, q)
+        k = apply_rmsnorm({"scale": p["k_norm"]}, k)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _grouped(q, n_kv: int):
+    """(B, S, H, D) -> (B, Kv, group, S, D)."""
+    b, s, h, dh = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, dh).transpose(0, 2, 3, 1, 4)
+
+
+def _chunk_mask(q_pos, k_pos, k_valid, causal, window):
+    mask = (k_pos < k_valid)[None, :] & jnp.ones(
+        (q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & ((q_pos[:, None] - k_pos[None, :]) < window)
+    return mask
+
+
+def _c(x, spec):
+    """Best-effort sharding constraint (no-op without a mesh).  The
+    flash scan carries MUST be pinned: unconstrained zeros-inits let
+    GSPMD resolve the loop state to fully replicated, silently turning
+    sharded attention into per-device full-batch attention."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def _flash_fwd_impl(qg, kg, vg, cfgt):
+    """qg: (B,Kv,G,Sq,D); kg/vg: (B,Kv,Sk,D).  Returns (out, L) with
+    L = m + log(l) row statistics (the flash-backward residual)."""
+    causal, window, scale, q_offset, cq, ck, k_valid, spec5, spec4 = cfgt
+    b, kvh, g, sq, dh = qg.shape
+    sk = kg.shape[2]
+    nq, nk = sq // cq, sk // ck
+    qg, kg, vg = _c(qg, spec5), _c(kg, spec4), _c(vg, spec4)
+
+    def q_step(_, qi):
+        qc = jax.lax.dynamic_slice_in_dim(qg, qi * cq, cq, axis=3)
+        q_pos = q_offset + qi * cq + jnp.arange(cq)
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(kg, ki * ck, ck, axis=2)
+            vc = jax.lax.dynamic_slice_in_dim(vg, ki * ck, ck, axis=2)
+            k_pos = ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            mask = _chunk_mask(q_pos, k_pos, k_valid, causal, window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new) * mask
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vc.astype(jnp.float32))
+            return (_c(m_new, spec5), _c(l_new, spec5),
+                    _c(acc_new, spec5)), None
+
+        init = (_c(jnp.full((b, kvh, g, cq, 1), NEG_INF, jnp.float32),
+                   spec5),
+                _c(jnp.zeros((b, kvh, g, cq, 1), jnp.float32), spec5),
+                _c(jnp.zeros((b, kvh, g, cq, dh), jnp.float32), spec5))
+        (m, l, acc), _ = jax.lax.scan(k_step, init, jnp.arange(nk))
+        safe = jnp.where(l > 0, l, 1.0)
+        out_c = (acc / safe * (l > 0)).astype(qg.dtype)
+        lse = jnp.where(l[..., 0] > 0, m[..., 0] + jnp.log(safe[..., 0]),
+                        -NEG_INF)                       # dead rows: +1e30
+        return None, (out_c, lse)
+
+    _, (chunks, lses) = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = jnp.moveaxis(chunks, 0, 3).reshape(b, kvh, g, sq, dh)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(b, kvh, g, sq)
+    return _c(out, spec5), lse
+
+
+def _flash(qg, kg, vg, cfgt):
+    out, _ = _flash_fwd_impl(qg, kg, vg, cfgt)
+    return out
+
+
+def _flash_fwd(qg, kg, vg, cfgt):
+    out, lse = _flash_fwd_impl(qg, kg, vg, cfgt)
+    return out, (qg, kg, vg, out, lse)
+
+
+def _flash_bwd(cfgt, res, dout):
+    """Flash-attention backward: recompute s/p per chunk pair, never
+    materialize (Sq, Sk).  O(Sk) f32 dk/dv accumulators."""
+    causal, window, scale, q_offset, cq, ck, k_valid, spec5, spec4 = cfgt
+    qg, kg, vg, out, lse = res
+    b, kvh, g, sq, dh = qg.shape
+    sk = kg.shape[2]
+    nq, nk = sq // cq, sk // ck
+    dout = _c(dout, spec5)
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                            # (B,Kv,G,Sq)
+
+    def q_step(carry, qi):
+        dk, dv = carry
+        qc = jax.lax.dynamic_slice_in_dim(qg, qi * cq, cq, axis=3) \
+            .astype(jnp.float32)
+        doc = jax.lax.dynamic_slice_in_dim(dout, qi * cq, cq, axis=3) \
+            .astype(jnp.float32)
+        lc = jax.lax.dynamic_slice_in_dim(lse, qi * cq, cq, axis=3)
+        dc = jax.lax.dynamic_slice_in_dim(delta, qi * cq, cq, axis=3)
+        q_pos = q_offset + qi * cq + jnp.arange(cq)
+
+        def k_step(inner, ki):
+            dqc, dk, dv = inner
+            kc = jax.lax.dynamic_slice_in_dim(kg, ki * ck, ck, axis=2) \
+                .astype(jnp.float32)
+            vc = jax.lax.dynamic_slice_in_dim(vg, ki * ck, ck, axis=2) \
+                .astype(jnp.float32)
+            k_pos = ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qc, kc) * scale
+            mask = _chunk_mask(q_pos, k_pos, k_valid, causal, window)
+            p = jnp.exp(jnp.where(mask, s, NEG_INF) - lc[..., None])
+            p = p * mask                                 # (B,Kv,G,cq,ck)
+            dv_c = jnp.einsum("bkgqs,bkgqd->bksd", p, doc)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", doc, vc)
+            ds = p * (dp - dc[..., None]) * scale
+            dq_new = dqc + jnp.einsum("bkgqs,bksd->bkgqd", ds, kc)
+            dk_c = jnp.einsum("bkgqs,bkgqd->bksd", ds, qc)
+            upd = lambda acc, c: _c(jax.lax.dynamic_update_slice_in_dim(
+                acc, jax.lax.dynamic_slice_in_dim(
+                    acc, ki * ck, ck, axis=2) + c, ki * ck, axis=2), spec4)
+            return (_c(dq_new, spec5), upd(dk, dk_c), upd(dv, dv_c)), None
+
+        init = (_c(jnp.zeros((b, kvh, g, cq, dh), jnp.float32), spec5),
+                dk, dv)
+        (dqc, dk, dv), _ = jax.lax.scan(k_step, init, jnp.arange(nk))
+        return (dk, dv), dqc
+
+    dk0 = _c(jnp.zeros((b, kvh, sk, dh), jnp.float32), spec4)
+    dv0 = _c(jnp.zeros((b, kvh, sk, dh), jnp.float32), spec4)
+    (dk, dv), dq_chunks = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dq_chunks, 0, 3).reshape(b, kvh, g, sq, dh)
+    return (dq.astype(qg.dtype), dk.astype(kg.dtype), dv.astype(vg.dtype))
+
+
+_flash = jax.custom_vjp(_flash, nondiff_argnums=(3,))
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def chunked_attention(q, k, v, *, causal, window, scale, q_offset=0,
+                      chunk_q=1024, chunk_k=1024, k_valid=None,
+                      spec5=None, spec4=None):
+    """Online-softmax attention, O(chunk^2) memory in BOTH directions
+    (flash-style custom VJP: backward recomputes per chunk pair).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Kv, D).  Matches the flash kernel /
+    ``kernels.ref.attention_ref`` semantics.  ``spec5``/``spec4`` pin the
+    sharding of the (B, Kv, G, S, D) / (B, Kv, S, D) internals.
+    """
+    b, sq, h, dh = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    chunk_q = min(chunk_q, sq)
+    chunk_k = min(chunk_k, sk)
+    pad_q, pad_k = -sq % chunk_q, -sk % chunk_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    k_valid = sk if k_valid is None else k_valid
+
+    qg = _grouped(qp, kvh)                       # (B, Kv, g, Sq', D)
+    kg = kp.transpose(0, 2, 1, 3)                # (B, Kv, Sk', D)
+    vg = vp.transpose(0, 2, 1, 3)
+    cfgt = (causal, window, scale, q_offset, chunk_q, chunk_k, k_valid,
+            spec5, spec4)
+    og = _flash(qg, kg, vg, cfgt)
+    out = og.transpose(0, 3, 1, 2, 4).reshape(b, sq + pad_q, h, dh)
+    return out[:, :sq]
+
+
+def _full_attention(q, k, v, cfg: ModelConfig, *, causal, window,
+                    q_offset=0, k_valid=None, rules: MeshRules = None):
+    """Dispatch on cfg.attn_impl for the prefill/train path.
+
+    KV is repeated to the query-head count first: with kv == h the
+    grouped flash layout is (B, H, 1, S, D), whose head dim a plain
+    PartitionSpec can shard (TP); the repeat materializes only each
+    shard's own heads.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    h, kvh = q.shape[2], k.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    spec5 = spec4 = None
+    if rules is not None:
+        spec5 = rules.nsharding("batch", "heads", None, None, None)
+        spec4 = rules.nsharding("batch", "heads", None, None)
+    if cfg.attn_impl == "pallas":
+        from ..kernels import ops as kops
+        b, sq, h, dh = q.shape
+        kvh = k.shape[2]
+        qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+        kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, k.shape[1], dh)
+        vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, v.shape[1], dh)
+        of = kops.attention(qf, kf, vf, causal=causal, window=window,
+                            scale=scale, q_offset=q_offset)
+        return of.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)
+    if cfg.attn_impl == "naive":
+        from ..kernels import ref as kref
+        b, sq, h, dh = q.shape
+        kvh = k.shape[2]
+        qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+        kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, k.shape[1], dh)
+        vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, v.shape[1], dh)
+        of = kref.attention_ref(qf, kf, vf, causal=causal, window=window,
+                                scale=scale, q_offset=q_offset)
+        return of.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             scale=scale, q_offset=q_offset,
+                             chunk_q=cfg.attn_chunk_q,
+                             chunk_k=cfg.attn_chunk_k, k_valid=k_valid,
+                             spec5=spec5, spec4=spec4)
+
+
+def _decode_attention(q, cache: KVCache, cur_len, window):
+    """One-token attention over the cache.  q: (B, 1, H, D)."""
+    b, _, h, dh = q.shape
+    kvh = cache.k.shape[2]
+    scale = 1.0 / math.sqrt(dh)
+    qg = _grouped(q, kvh)                         # (B, Kv, g, 1, D)
+    kc = cache.k.transpose(0, 2, 1, 3)            # (B, Kv, S, D)
+    vc = cache.v.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * scale
+    pos = jnp.arange(cache.k.shape[1])
+    if cache.ring:
+        # ring cache holds the last W keys; all slots < min(len, W) valid
+        mask = pos < jnp.minimum(cur_len, cache.k.shape[1])
+    else:
+        mask = pos < cur_len
+        if window is not None:
+            mask = mask & (pos >= cur_len - window)
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vc.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def apply_attention(p, cfg: ModelConfig, rules: MeshRules, x, positions, *,
+                    causal=True, window=None, kv_x=None,
+                    cache: Optional[KVCache] = None, cache_pos=None,
+                    update_cache=True):
+    """Returns (out (B,S,d), new_cache).
+
+    Modes:
+      * cache None:      full self/cross attention (train / prefill)
+      * cache + update:  decode self-attention (append k,v at cache_pos)
+      * cache, no update: decode cross-attention (static cache)
+    """
+    cross = kv_x is not None
+    kv_src = kv_x if cross else x
+    kv_positions = (jnp.arange(kv_src.shape[1])
+                    if (cross or cache is None) else positions)
+    q, k, v = _project_qkv(p, cfg, x, kv_src, positions, kv_positions)
+    q = constrain(q, rules, "batch", None, "heads", None)
+
+    new_cache = cache
+    s_q = x.shape[1]
+    if cache is None:
+        out = _full_attention(q, k, v, cfg, causal=causal and not cross,
+                              window=window, rules=rules)
+    elif s_q > 1:
+        # single-shot prefill: attend over the prompt itself (or the
+        # encoder output, for cross-attention), then write the (last
+        # window of) keys/values into the cache
+        out = _full_attention(q, k, v, cfg, causal=causal and not cross,
+                              window=window, rules=rules)
+        if update_cache:
+            w_cache = cache.k.shape[1]
+            if cache.ring:
+                take = min(w_cache, s_q)
+                src_k, src_v = k[:, -take:], v[:, -take:]
+                idx = (cache_pos + s_q - take
+                       + jnp.arange(take)) % w_cache
+                ck = cache.k.at[:, idx].set(src_k)
+                cv = cache.v.at[:, idx].set(src_v)
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    cache.k, k, cache_pos, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    cache.v, v, cache_pos, axis=1)
+            ck = constrain(ck, rules, "batch", "kv_seq", None, None)
+            cv = constrain(cv, rules, "batch", "kv_seq", None, None)
+            new_cache = KVCache(ck, cv, cache.ring)
+    else:
+        if update_cache:
+            idx = (cache_pos % cache.k.shape[1]) if cache.ring else cache_pos
+            ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, idx, axis=1)
+            ck = constrain(ck, rules, "batch", "kv_seq", None, None)
+            cv = constrain(cv, rules, "batch", "kv_seq", None, None)
+            new_cache = KVCache(ck, cv, cache.ring)
+            cur = cache_pos + s_q
+        else:
+            cur = cache.k.shape[1]
+        out = _decode_attention(q, new_cache, cur, window)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return constrain(out, rules, "batch", None, None), new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype,
+               window: Optional[int] = None) -> KVCache:
+    s = min(seq, window) if window else seq
+    shape = (batch, s, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   ring=window is not None and window < seq)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int, dtype,
+                   window: Optional[int] = None) -> KVCache:
+    s = min(seq, window) if window else seq
+    shape = (batch, s, cfg.n_kv_heads, cfg.resolved_head_dim)
+    sd = jax.ShapeDtypeStruct(shape, dtype)
+    return KVCache(sd, sd, ring=window is not None and window < seq)

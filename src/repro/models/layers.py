@@ -1,0 +1,161 @@
+"""Primitive layers: params-as-pytrees, functional applies.
+
+Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the
+params pytree with tuples of *logical axis names* (see
+``parallel.sharding.MeshRules``) -- the launcher turns them into
+NamedShardings.  No framework dependency: plain dicts of jnp arrays.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Initializer = "callable"
+
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, logical: Tuple, dtype,
+               bias: bool = False, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(key, (d_in, d_out), scale, dtype)}
+    s = {"w": logical}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        s["b"] = (logical[-1],)
+    return p, s
+
+
+def apply_dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_rmsnorm(d: int, dtype, logical=(None,)):
+    # norm scales are tiny: replicate
+    return {"scale": jnp.zeros((d,), dtype)}, {"scale": logical}
+
+
+def apply_rmsnorm(p, x, *, offset: bool = True, eps: float = 1e-6):
+    """RMSNorm; ``offset=True`` uses the (1 + w) parametrization (so a
+    zero-init scale is the identity -- gemma convention, harmless for
+    all others since we init scales to zero)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = p["scale"].astype(jnp.float32)
+    return (x * (1.0 + w if offset else w)).astype(dt)
+
+
+def init_embedding(key, vocab: int, d: int, dtype):
+    p = {"table": _normal(key, (vocab, d), 1.0, dtype)}
+    return p, {"table": ("vocab", "fsdp")}
+
+
+def apply_embedding(p, tokens, *, scale: bool = False):
+    x = jnp.take(p["table"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(x.shape[-1]), x.dtype)
+    return x
+
+
+def logits_from_embedding(p, x):
+    """Tied LM head: x @ table^T (padded-vocab logits)."""
+    return x @ p["table"].T
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "gate": _normal(k1, (d, d_ff), 1.0 / math.sqrt(d), dtype),
+        "up": _normal(k2, (d, d_ff), 1.0 / math.sqrt(d), dtype),
+        "down": _normal(k3, (d_ff, d), 1.0 / math.sqrt(d_ff), dtype),
+    }
+    s = {"gate": ("fsdp", "mlp"), "up": ("fsdp", "mlp"),
+         "down": ("mlp", "fsdp")}
+    return p, s
+
+
+def apply_mlp(p, x, act: str = "silu"):
+    a = x @ p["gate"]
+    a = jax.nn.silu(a) if act == "silu" else jax.nn.gelu(a)
+    return (a * (x @ p["up"])) @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) or (S,) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                    # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings (no params).
+
+    ``positions``: int -> arange(int); or a (S,) position array (decode
+    computes the embedding at the current offset directly, no table).
+    """
+    if isinstance(positions, int):
+        positions = jnp.arange(positions, dtype=jnp.int32)
+    pos = positions.astype(jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Causal temporal conv (mamba / rglru frontline)
+# ---------------------------------------------------------------------------
+
+def init_conv1d(key, channels: int, k: int, dtype):
+    p = {"w": _normal(key, (k, channels), 1.0 / math.sqrt(k), dtype),
+         "b": jnp.zeros((channels,), dtype)}
+    return p, {"w": (None, "d_inner"), "b": ("d_inner",)}
+
+
+def apply_conv1d(p, x, state=None):
+    """Depthwise causal conv along seq.  x: (B, S, C).
+
+    ``state``: (B, k-1, C) carry of trailing inputs for decode; returns
+    (y, new_state) when given, else y.
+    """
+    k = p["w"].shape[0]
+    if state is not None:
+        window = jnp.concatenate([state, x], axis=1)      # (B, k-1+S, C)
+        new_state = window[:, -(k - 1):, :]
+    else:
+        window = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_state = None
+    y = sum(window[:, i:i + x.shape[1], :] * p["w"][i]
+            for i in range(k)) + p["b"]
+    return (y, new_state) if state is not None else y

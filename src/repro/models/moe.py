@@ -1,0 +1,243 @@
+"""Mixture-of-Experts layer with sort-based, fixed-capacity dispatch.
+
+The paper's event-delivery idiom (compact sparse events into
+fixed-capacity buffers, scatter, process densely, combine) maps directly
+onto MoE token routing -- the "events" are token->expert assignments:
+
+  1. router top-k per token;
+  2. flatten (T*k) assignments, stable-sort by expert id, rank-in-expert
+     = position - segment start; assignments beyond ``capacity`` drop
+     (exactly the synapse-table row clipping);
+  3. scatter tokens into an (E, capacity, d) buffer -- with E sharded
+     over "model" (EP) and capacity over "data", GSPMD lowers this to
+     the all-to-all every MoE system hand-writes;
+  4. dense per-expert batched matmuls (MXU-friendly);
+  5. gather back, weight, sum over the k copies.
+
+No dynamic shapes anywhere, so the 1T-param kimi-k2 config lowers from
+ShapeDtypeStructs like everything else.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import MeshRules, constrain
+from .config import ModelConfig
+from .layers import _normal
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = math.ceil(n_tokens * cfg.moe_top_k * cfg.capacity_factor
+                    / cfg.n_experts)
+    return max(256, -(-cap // 256) * 256)     # pad for (data-)shardability
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _normal(ks[0], (d, e), 1 / math.sqrt(d), jnp.float32),
+        "gate": _normal(ks[1], (e, d, f), 1 / math.sqrt(d), dtype),
+        "up": _normal(ks[2], (e, d, f), 1 / math.sqrt(d), dtype),
+        "down": _normal(ks[3], (e, f, d), 1 / math.sqrt(f), dtype),
+    }
+    s = {
+        "router": ("fsdp", "experts"),
+        "gate": ("experts", "fsdp", None),
+        "up": ("experts", "fsdp", None),
+        "down": ("experts", None, "fsdp"),
+    }
+    return p, s
+
+
+def apply_moe(p, cfg: ModelConfig, rules: MeshRules, x) -> Tuple:
+    """x: (B, S, d) -> (y, aux losses dict).
+
+    Two implementations with identical semantics:
+      * ``_apply_moe_ep`` (production): shard_map expert parallelism.
+        Tokens never move -- every (data, model) shard routes its own
+        tokens, serves its *own* E/model_size experts for them with a
+        local fixed-capacity scatter (cap_loc = cap/dp per data shard),
+        and the k expert contributions per token are summed with one
+        psum over the model axis.  FSDP weight shards are all-gathered
+        over "data" per layer.  This avoids GSPMD's catastrophic
+        handling of big arbitrary-index scatters (a pjit-level dispatch
+        materializes the full (E*cap, d) buffer replicated per device:
+        ~37 GB for kimi-k2).
+      * ``_apply_moe_dense`` (reference): pjit-level sort+scatter
+        dispatch; used on meshless test rigs and as the oracle in the
+        EP-equivalence test.
+    """
+    if rules.mesh is not None and rules.axis("experts") is not None:
+        return _apply_moe_ep(p, cfg, rules, x)
+    return _apply_moe_dense(p, cfg, rules, x)
+
+
+def _topk_capacity_slots(probs, k: int, e: int, cap: int, e0=None,
+                         e_span: int = 0):
+    """Shared routing: top-k, renormalized weights, capacity-ranked
+    slots.  With (e0, e_span): only experts in [e0, e0+e_span) get live
+    slots (slot = (e-e0)*cap + rank), everything else -> dump slot."""
+    t = probs.shape[0]
+    top_w, top_e = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    flat_e = top_e.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = jnp.arange(t * k) - seg_start
+    rank = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    if e0 is None:
+        e0, e_span = 0, e
+    local = (flat_e >= e0) & (flat_e < e0 + e_span) & (rank < cap)
+    slot = jnp.where(local, (flat_e - e0) * cap + rank, e_span * cap)
+    kept = rank < cap                       # kept globally (any shard)
+    return top_w, flat_e, slot.astype(jnp.int32), kept
+
+
+def _expert_ffn(ebuf, gate, up, down, act: str):
+    a = jnp.einsum("ecd,edf->ecf", ebuf, gate)
+    a = jax.nn.silu(a) if act == "silu" else jax.nn.gelu(a)
+    h = a * jnp.einsum("ecd,edf->ecf", ebuf, up)
+    return jnp.einsum("ecf,efd->ecd", h, down)
+
+
+def _apply_moe_ep(p, cfg: ModelConfig, rules: MeshRules, x) -> Tuple:
+    mesh = rules.mesh
+    b, s, d = x.shape
+    k, e = cfg.moe_top_k, cfg.n_experts
+    batch_ax = rules.batch
+    model_ax = rules.axis("experts")
+    fsdp_ax = rules.fsdp
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in ((batch_ax,) if isinstance(batch_ax, str) else
+              (batch_ax or ())):
+        dp *= axes.get(a, 1)
+    t_loc = (b // dp if b % dp == 0 else b) * s
+    cap_loc = max(32, -(-math.ceil(t_loc * k * cfg.capacity_factor / e)
+                        // 32) * 32)
+
+    from jax.sharding import PartitionSpec as P
+    x_spec = P(batch_ax, None, None)
+    w_in_spec = P(model_ax, fsdp_ax, None)    # gate/up (E, d, f)
+    w_out_spec = P(model_ax, None, fsdp_ax)   # down (E, f, d)
+    r_spec = P(None, None)                    # router replicated (tiny)
+
+    def body(xb, router, gate, up, down):
+        bl, sl, _ = xb.shape
+        tl = bl * sl
+        xt = xb.reshape(tl, d)
+        if fsdp_ax is not None:
+            gate = jax.lax.all_gather(gate, fsdp_ax, axis=1, tiled=True)
+            up = jax.lax.all_gather(up, fsdp_ax, axis=1, tiled=True)
+            down = jax.lax.all_gather(down, fsdp_ax, axis=2, tiled=True)
+        e_loc = gate.shape[0]
+        e0 = jax.lax.axis_index(model_ax) * e_loc
+
+        logits = xt.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, flat_e, slot, kept = _topk_capacity_slots(
+            probs, k, e, cap_loc, e0=e0, e_span=e_loc)
+
+        tok = jnp.repeat(jnp.arange(tl), k)
+        buf = jnp.zeros((e_loc * cap_loc + 1, d), xb.dtype)
+        buf = buf.at[slot].set(xt[tok], mode="drop")
+        out = _expert_ffn(buf[:-1].reshape(e_loc, cap_loc, d),
+                          gate, up, down, cfg.mlp_act)
+        out_flat = jnp.concatenate(
+            [out.reshape(e_loc * cap_loc, d),
+             jnp.zeros((1, d), xb.dtype)], axis=0)
+        gathered = out_flat[slot]            # dump slot -> zeros
+        w = (top_w.reshape(-1)
+             * (slot < e_loc * cap_loc))[:, None].astype(xb.dtype)
+        y = jnp.sum((gathered * w).reshape(tl, k, d), axis=1)
+        y = jax.lax.psum(y, model_ax)        # k experts live on k shards
+
+        # aux losses (identical across model ranks; averaged over data)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0 / (tl * k))
+        lb = e * jnp.sum(me * ce)
+        zl = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+        dropped = 1.0 - jnp.sum(kept) / (tl * k)
+        all_axes = tuple(mesh.axis_names)
+        n_shards = 1
+        for a in all_axes:
+            n_shards *= axes.get(a, 1)
+        aux = jnp.stack([lb, zl, dropped])
+        aux = jax.lax.psum(aux, all_axes) / n_shards
+        return y.reshape(bl, sl, d), aux
+
+    y, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, r_spec, w_in_spec, w_in_spec, w_out_spec),
+        out_specs=(x_spec, P()), check_vma=False)(
+        x, p["router"], p["gate"], p["up"], p["down"])
+    return y, {"load_balance": aux[0], "router_z": aux[1],
+               "frac_dropped": aux[2]}
+
+
+def _apply_moe_dense(p, cfg: ModelConfig, rules: MeshRules, x) -> Tuple:
+    """Reference pjit-level dispatch (meshless tests, equivalence oracle)."""
+    b, s, d = x.shape
+    t = b * s
+    k, e = cfg.moe_top_k, cfg.n_experts
+    cap = moe_capacity(cfg, t)
+    xt = x.reshape(t, d)
+
+    # ---- routing ---------------------------------------------------------
+    logits = (xt.astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # ---- fixed-capacity slot assignment (sort + segment rank) ------------
+    flat_e = top_e.reshape(-1)                            # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = jnp.arange(t * k) - seg_start
+    slot_sorted = jnp.where(rank_sorted < cap,
+                            sorted_e * cap + rank_sorted, e * cap)
+    slot = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        slot_sorted.astype(jnp.int32))
+
+    # ---- dispatch: scatter tokens into the (E, cap, d) buffer ------------
+    tok_of_assign = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(xt[tok_of_assign], mode="drop",
+                           unique_indices=False)
+    ebuf = buf[:-1].reshape(e, cap, d)
+    ebuf = constrain(ebuf, rules, "experts", "batch", None)
+
+    # ---- dense per-expert FFN --------------------------------------------
+    a = jnp.einsum("ecd,edf->ecf", ebuf, p["gate"])
+    a = jax.nn.silu(a) if cfg.mlp_act == "silu" else jax.nn.gelu(a)
+    h = a * jnp.einsum("ecd,edf->ecf", ebuf, p["up"])
+    out = jnp.einsum("ecf,efd->ecd", h, p["down"])
+    out = constrain(out, rules, "experts", "batch", None)
+
+    # ---- combine ----------------------------------------------------------
+    out_flat = jnp.concatenate(
+        [out.reshape(e * cap, d), jnp.zeros((1, d), x.dtype)], axis=0)
+    gathered = out_flat[slot]                             # (T*k, d)
+    kept = (slot < e * cap).astype(jnp.float32)
+    w = (top_w.reshape(-1) * kept)[:, None].astype(x.dtype)
+    y = jnp.sum((gathered * w).reshape(t, k, d), axis=1)
+
+    # ---- aux losses (switch-style load balance + router z-loss) ----------
+    me = jnp.mean(probs, axis=0)                          # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e].add(
+        1.0 / (t * k))                                    # assignment frac
+    lb = e * jnp.sum(me * ce)
+    zl = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    frac_dropped = 1.0 - jnp.sum(kept) / (t * k)
+    aux = {"load_balance": lb, "router_z": zl,
+           "frac_dropped": frac_dropped}
+    return y.reshape(b, s, d), aux

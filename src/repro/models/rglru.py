@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin).
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)  per-channel decay, c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+wrapped Griffin-style: in-proj to (x, gate) branches, temporal conv on
+the x branch, RG-LRU, then ``h * gelu(gate)`` and out-proj.  The
+recurrence is diagonal, so it shares the chunked associative-scan
+machinery with the mamba block (``ssm.diag_scan_chunk``) and shards its
+width over the "model" axis with zero intra-scan collectives.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import MeshRules, constrain
+from .config import ModelConfig
+from .layers import _normal, apply_conv1d, init_conv1d
+from .ssm import diag_scan_chunk
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig, dtype):
+    d, w, k = cfg.d_model, cfg.resolved_rglru_width, cfg.conv_k
+    ks = jax.random.split(key, 5)
+    conv_p, conv_s = init_conv1d(ks[0], w, k, dtype)
+    # Lambda init so decay a^c in [0.9, 0.999] at r=1 (griffin appendix)
+    u = jax.random.uniform(ks[1], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2.0 * _C)))  # softplus^-1
+    p = {
+        "in_proj": _normal(ks[2], (d, 2 * w), 1 / math.sqrt(d), dtype),
+        "conv": conv_p,
+        "w_a": _normal(ks[3], (w, w), 1 / math.sqrt(w), dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": _normal(ks[4], (w, w), 1 / math.sqrt(w), dtype),
+        "b_x": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "out_proj": _normal(jax.random.fold_in(key, 9), (w, d),
+                            1 / math.sqrt(w), dtype),
+    }
+    s = {
+        "in_proj": ("fsdp", "d_inner"), "conv": conv_s,
+        "w_a": (None, "d_inner"), "b_a": ("d_inner",),
+        "w_x": (None, "d_inner"), "b_x": ("d_inner",),
+        "lam": ("d_inner",),
+        "out_proj": ("d_inner", "fsdp"),
+    }
+    return p, s
+
+
+def _gates(p, x_c):
+    """log-decay and gated input for a chunk.  x_c: (B, C, w)."""
+    xf = x_c.astype(jnp.float32)
+    r = jax.nn.sigmoid((x_c @ p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid((x_c @ p["w_x"]).astype(jnp.float32) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    return a, beta * (i * xf)
+
+
+def apply_rglru(p, cfg: ModelConfig, rules: MeshRules, x,
+                state: Optional[dict] = None):
+    """x: (B, S, d) -> (out, new_state).  state = {"conv", "h"}."""
+    b, s, _ = x.shape
+    w = cfg.resolved_rglru_width
+
+    xz = x @ p["in_proj"]
+    xz = constrain(xz, rules, "batch", None, "d_inner")
+    x_in, gate = jnp.split(xz, 2, axis=-1)
+
+    if state is not None:
+        x_c, conv_state = apply_conv1d(p["conv"], x_in, state["conv"])
+    else:
+        x_c, conv_state = apply_conv1d(p["conv"], x_in), None
+
+    if state is not None and s == 1:
+        a, bx = _gates(p, x_c)
+        h = a[:, 0] * state["h"] + bx[:, 0]
+        y = h[:, None]
+        new_state = {"conv": conv_state, "h": h}
+    else:
+        chunk = min(cfg.mamba_chunk, s)
+        pad = -s % chunk
+        xc_p = jnp.pad(x_c, ((0, 0), (0, pad), (0, 0))) if pad else x_c
+        nc = (s + pad) // chunk
+        xs = xc_p.reshape(b, nc, chunk, w).transpose(1, 0, 2, 3)
+        # padded tail positions must not advance the carried state
+        valid = (jnp.arange(nc * chunk) < s).reshape(nc, chunk)
+
+        def step(h, inp):
+            x_chunk, valid_c = inp
+            a, bx = _gates(p, x_chunk)
+            vc = valid_c[None, :, None]
+            a = jnp.where(vc, a, 1.0)
+            bx = jnp.where(vc, bx, 0.0)
+            h_last, h_all = diag_scan_chunk(a, bx, h)
+            return h_last, h_all
+
+        h0 = jnp.zeros((b, w), jnp.float32) if state is None else state["h"]
+        h_last, ys = jax.lax.scan(jax.checkpoint(step), h0, (xs, valid))
+        y = ys.transpose(1, 0, 2, 3).reshape(b, nc * chunk, w)[:, :s]
+        new_state = None if state is None else \
+            {"conv": conv_state, "h": h_last}
+
+    y = y.astype(x.dtype) * jax.nn.gelu(gate)
+    out = y @ p["out_proj"]
+    return constrain(out, rules, "batch", None, None), new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.resolved_rglru_width
+    return {"conv": jnp.zeros((batch, cfg.conv_k - 1, w), dtype),
+            "h": jnp.zeros((batch, w), jnp.float32)}
+
+
+def abstract_rglru_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.resolved_rglru_width
+    return {"conv": jax.ShapeDtypeStruct((batch, cfg.conv_k - 1, w), dtype),
+            "h": jax.ShapeDtypeStruct((batch, w), jnp.float32)}

@@ -1,0 +1,163 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b), TPU-adapted.
+
+The GPU reference implementation is a fused CUDA selective-scan over the
+whole sequence.  The TPU adaptation chunks the sequence: an outer
+``lax.scan`` over chunks carries the (B, d_inner, N) state, and inside a
+chunk the diagonal linear recurrence runs as a parallel
+``associative_scan`` -- so the (B, chunk, d_inner, N) discretized tensors
+exist only per-chunk (bounded HBM), while the MXU sees batched matmuls.
+``d_inner`` shards over the "model" axis; the recurrence is elementwise
+over channels so no collective is needed inside the scan.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import MeshRules, constrain
+from .config import ModelConfig
+from .layers import _normal, apply_conv1d, init_conv1d
+
+
+def _combine(x, y):
+    a1, b1 = x
+    a2, b2 = y
+    return a1 * a2, b1 * a2 + b2
+
+
+def diag_scan_chunk(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t within one chunk (axis 1), given carry.
+
+    a, b: (B, C, ...); h0: (B, ...).  Returns (h_last, h_all).
+    """
+    prod, pref = jax.lax.associative_scan(_combine, (a, b), axis=1)
+    h_all = prod * h0[:, None] + pref
+    return h_all[:, -1], h_all
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d, di = cfg.d_model, cfg.d_inner
+    n, r, k = cfg.ssm_state, cfg.resolved_dt_rank, cfg.conv_k
+    ks = jax.random.split(key, 6)
+    conv_p, conv_s = init_conv1d(ks[0], di, k, dtype)
+    # S4D-real initialization of A; dt bias sets softplus(dt) in
+    # [1e-3, 1e-1] as in the mamba reference.
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    dt_init = jnp.exp(jax.random.uniform(ks[1], (di,), jnp.float32)
+                      * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    p = {
+        "in_proj": _normal(ks[2], (d, 2 * di), 1 / math.sqrt(d), dtype),
+        "conv": conv_p,
+        "x_proj": _normal(ks[3], (di, r + 2 * n), 1 / math.sqrt(di), dtype),
+        "dt_proj": _normal(ks[4], (r, di), 1 / math.sqrt(r), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": _normal(ks[5], (di, d), 1 / math.sqrt(di), dtype),
+    }
+    s = {
+        "in_proj": ("fsdp", "d_inner"), "conv": conv_s,
+        "x_proj": ("d_inner", None), "dt_proj": (None, "d_inner"),
+        "dt_bias": ("d_inner",), "a_log": ("d_inner", None),
+        "d_skip": ("d_inner",), "out_proj": ("d_inner", "fsdp"),
+    }
+    return p, s
+
+
+def _ssm_inputs(p, cfg: ModelConfig, x_c):
+    """Per-position SSM tensors from the conv output (any seq length)."""
+    n, r = cfg.ssm_state, cfg.resolved_dt_rank
+    xdb = x_c @ p["x_proj"]
+    dt_low, b_in, c_in = jnp.split(xdb, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_low @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    return dt, b_in.astype(jnp.float32), c_in.astype(jnp.float32)
+
+
+def apply_mamba(p, cfg: ModelConfig, rules: MeshRules, x,
+                state: Optional[dict] = None):
+    """x: (B, S, d).  Returns (out, new_state).
+
+    ``state`` = {"conv": (B, k-1, di), "ssm": (B, di, N)} for decode;
+    None for train/prefill (zero initial state, no state returned).
+    """
+    b, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    a_neg = -jnp.exp(p["a_log"])                          # (di, N)
+
+    xz = x @ p["in_proj"]
+    xz = constrain(xz, rules, "batch", None, "d_inner")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+
+    if state is not None:
+        x_c, conv_state = apply_conv1d(p["conv"], x_in, state["conv"])
+    else:
+        x_c, conv_state = apply_conv1d(p["conv"], x_in), None
+    x_c = jax.nn.silu(x_c)
+
+    if state is not None and s == 1:
+        # single-step decode: h' = exp(dt A) h + dt B x
+        dt, b_in, c_in = _ssm_inputs(p, cfg, x_c)
+        dt1, b1, c1, x1 = dt[:, 0], b_in[:, 0], c_in[:, 0], \
+            x_c[:, 0].astype(jnp.float32)
+        da = jnp.exp(dt1[:, :, None] * a_neg[None])       # (B, di, N)
+        db = dt1[:, :, None] * b1[:, None, :] * x1[:, :, None]
+        h = da * state["ssm"] + db
+        y = jnp.einsum("bdn,bn->bd", h, c1)[:, None]
+        new_state = {"conv": conv_state, "ssm": h}
+    else:
+        chunk = min(cfg.mamba_chunk, s)
+        pad = -s % chunk
+        xc_p = jnp.pad(x_c, ((0, 0), (0, pad), (0, 0))) if pad else x_c
+        nc = (s + pad) // chunk
+        xs = xc_p.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3)
+        # padded tail positions must not advance the carried state
+        valid = (jnp.arange(nc * chunk) < s).reshape(nc, chunk)
+
+        def step(h, inp):
+            x_chunk, valid_c = inp
+            dt, b_in, c_in = _ssm_inputs(p, cfg, x_chunk)
+            xf = x_chunk.astype(jnp.float32)
+            a = jnp.exp(dt[..., None] * a_neg[None, None])     # (B,C,di,N)
+            bx = dt[..., None] * b_in[:, :, None, :] * xf[..., None]
+            vc = valid_c[None, :, None, None]
+            a = jnp.where(vc, a, 1.0)
+            bx = jnp.where(vc, bx, 0.0)
+            h_last, h_all = diag_scan_chunk(a, bx, h)
+            y = jnp.einsum("bcdn,bcn->bcd", h_all, c_in)
+            return h_last, y
+
+        h0 = jnp.zeros((b, di, n), jnp.float32) if state is None \
+            else state["ssm"]
+        # checkpoint per chunk: backward recomputes the (B,C,di,N)
+        # discretized tensors instead of saving them for every chunk
+        h_last, ys = jax.lax.scan(jax.checkpoint(step), h0, (xs, valid))
+        y = ys.transpose(1, 0, 2, 3).reshape(b, nc * chunk, di)[:, :s]
+        new_state = None if state is None else \
+            {"conv": conv_state, "ssm": h_last}
+
+    y = (y + p["d_skip"] * x_c.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return constrain(out, rules, "batch", None, None), new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_k - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def abstract_mamba_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_k - 1, cfg.d_inner),
+                                     dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, cfg.d_inner, cfg.ssm_state),
+                                    jnp.float32),
+    }

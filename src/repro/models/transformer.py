@@ -1,0 +1,442 @@
+"""Block assembly and full-model forward for all architecture families.
+
+Layers are grouped by the config's ``pattern`` (e.g. griffin's
+("rglru", "rglru", "attn")): full periods are *stacked* and driven by one
+``lax.scan`` (constant compile time in depth), remainder layers are
+unrolled.  Decode threads per-layer recurrent state / KV caches through
+the same scan as xs/ys.
+
+Block kinds:
+  attn   -- pre-norm attention + pre-norm gated MLP
+  moe    -- pre-norm attention + pre-norm MoE FFN
+  mamba  -- pre-norm mamba mixer (no MLP; mamba1 convention)
+  rglru  -- pre-norm RG-LRU mixer + pre-norm gated MLP
+plus whisper's encoder stack and per-layer cross-attention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import MeshRules, constrain
+from .attention import (KVCache, abstract_cache, apply_attention,
+                        init_attention, init_cache)
+from .config import ModelConfig
+from .frontends import (apply_audio_frontend, apply_patch_frontend,
+                        init_frontend)
+from .layers import (apply_embedding, apply_mlp, apply_rmsnorm, init_dense,
+                     init_embedding, init_mlp, init_rmsnorm,
+                     logits_from_embedding, sinusoidal_positions)
+from .moe import apply_moe, init_moe
+from .rglru import (abstract_rglru_state, apply_rglru, init_rglru,
+                    init_rglru_state)
+from .ssm import (abstract_mamba_state, apply_mamba, init_mamba,
+                  init_mamba_state)
+
+AUX_KEYS = ("load_balance", "router_z", "frac_dropped")
+
+
+def _zero_aux():
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, kind: str, dtype,
+               cross: bool = False):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    p["ln1"], s["ln1"] = init_rmsnorm(d, dtype)
+    if kind in ("attn", "moe"):
+        p["attn"], s["attn"] = init_attention(ks[0], cfg, dtype)
+        p["ln2"], s["ln2"] = init_rmsnorm(d, dtype)
+        if kind == "moe":
+            p["moe"], s["moe"] = init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"], s["mlp"] = init_mlp(ks[1], d, cfg.d_ff, dtype)
+    elif kind == "mamba":
+        p["mamba"], s["mamba"] = init_mamba(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["rglru"], s["rglru"] = init_rglru(ks[0], cfg, dtype)
+        p["ln2"], s["ln2"] = init_rmsnorm(d, dtype)
+        p["mlp"], s["mlp"] = init_mlp(ks[1], d, cfg.d_ff, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if cross:
+        p["ln_x"], s["ln_x"] = init_rmsnorm(d, dtype)
+        p["cross"], s["cross"] = init_attention(ks[2], cfg, dtype,
+                                                cross=True)
+    return p, s
+
+
+def apply_block(p, cfg: ModelConfig, rules: MeshRules, kind: str, x,
+                positions, *, state=None, cache_pos=None, window=None,
+                enc_out=None, cross_state=None, causal=True):
+    """Returns (x, new_state, new_cross_state, aux)."""
+    aux = _zero_aux()
+    new_state, new_cross = state, cross_state
+    h = apply_rmsnorm(p["ln1"], x)
+    if kind in ("attn", "moe"):
+        a, new_state = apply_attention(
+            p["attn"], cfg, rules, h, positions, causal=causal,
+            window=window, cache=state, cache_pos=cache_pos)
+        x = x + a
+        if "cross" in p and (enc_out is not None
+                             or cross_state is not None):
+            hx = apply_rmsnorm(p["ln_x"], x)
+            if enc_out is not None:
+                # train (no cache) or prefill (fills the cross cache)
+                cx, new_cross = apply_attention(
+                    p["cross"], cfg, rules, hx, positions, kv_x=enc_out,
+                    cache=cross_state,
+                    cache_pos=None if cross_state is None else
+                    jnp.zeros((), jnp.int32))
+            else:                          # decode: static cross cache
+                cx, _ = apply_attention(p["cross"], cfg, rules, hx,
+                                        positions, cache=cross_state,
+                                        update_cache=False)
+            x = x + cx
+        h2 = apply_rmsnorm(p["ln2"], x)
+        if kind == "moe":
+            m, aux = apply_moe(p["moe"], cfg, rules, h2)
+        else:
+            m = apply_mlp(p["mlp"], h2, cfg.mlp_act)
+        x = x + m
+    elif kind == "mamba":
+        m, new_state = apply_mamba(p["mamba"], cfg, rules, h, state=state)
+        x = x + m
+    elif kind == "rglru":
+        r, new_state = apply_rglru(p["rglru"], cfg, rules, h, state=state)
+        x = x + r
+        x = x + apply_mlp(p["mlp"], apply_rmsnorm(p["ln2"], x), cfg.mlp_act)
+    x = constrain(x, rules, "batch", "seq", None)
+    return x, new_state, new_cross, aux
+
+
+def block_state_init(cfg: ModelConfig, kind: str, batch: int, seq: int,
+                     dtype, abstract: bool = False):
+    """Decode-time state for one block of the given kind (or None)."""
+    win = cfg.window if kind in ("attn", "moe") and cfg.window else None
+    if kind in ("attn", "moe"):
+        fn = abstract_cache if abstract else init_cache
+        return fn(cfg, batch, seq, dtype, window=win)
+    if kind == "mamba":
+        fn = abstract_mamba_state if abstract else init_mamba_state
+        return fn(cfg, batch, dtype)
+    if kind == "rglru":
+        fn = abstract_rglru_state if abstract else init_rglru_state
+        return fn(cfg, batch, dtype)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Whole model: params
+# ---------------------------------------------------------------------------
+
+def _stack_trees(trees: List):
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+
+def init_model(key, cfg: ModelConfig):
+    """Returns (params, specs).  Layer params of each period position are
+    stacked (n_periods, ...); remainder layers unrolled in 'rest'."""
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + 8)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+
+    p["embed"], s["embed"] = init_embedding(keys[-1], cfg.padded_vocab,
+                                            cfg.d_model, dtype)
+    p["ln_f"], s["ln_f"] = init_rmsnorm(cfg.d_model, dtype)
+
+    kinds = cfg.layer_kinds
+    per = len(cfg.pattern)
+    n_periods, n_rest = cfg.pattern_periods
+    cross = cfg.cross_attn
+
+    if cfg.scan_layers and n_periods > 1:
+        blocks, bspecs = [], []
+        for pos in range(per):
+            kind = kinds[pos]
+            layer_ps = []
+            for i in range(n_periods):
+                lp, ls = init_block(keys[i * per + pos], cfg, kind, dtype,
+                                    cross=cross)
+                layer_ps.append(lp)
+            blocks.append(_stack_trees(layer_ps))
+            bspecs.append(jax.tree.map(
+                lambda names: ("stack",) + names, ls,
+                is_leaf=lambda t: isinstance(t, tuple)))
+        p["blocks"], s["blocks"] = blocks, bspecs
+        rest_idx = range(n_periods * per, cfg.n_layers)
+    else:
+        p["blocks"], s["blocks"] = [], []
+        rest_idx = range(cfg.n_layers)
+
+    rest, rspecs = [], []
+    for i in rest_idx:
+        lp, ls = init_block(keys[i], cfg, kinds[i], dtype, cross=cross)
+        rest.append(lp)
+        rspecs.append(ls)
+    p["rest"], s["rest"] = rest, rspecs
+
+    if cfg.encoder_layers:
+        enc, especs = [], []
+        ek = jax.random.split(jax.random.fold_in(key, 101),
+                              cfg.encoder_layers)
+        for i in range(cfg.encoder_layers):
+            lp, ls = init_block(ek[i], cfg, "attn", dtype)
+            enc.append(lp)
+            especs.append(ls)
+        p["enc_blocks"] = _stack_trees(enc)
+        s["enc_blocks"] = jax.tree.map(
+            lambda names: ("stack",) + names, especs[0],
+            is_leaf=lambda t: isinstance(t, tuple))
+        p["enc_ln_f"], s["enc_ln_f"] = init_rmsnorm(cfg.d_model, dtype)
+
+    if cfg.encoder_seq or cfg.n_patches:
+        p["frontend"], s["frontend"] = init_frontend(
+            jax.random.fold_in(key, 202), cfg, dtype)
+    return p, s
+
+
+def abstract_model(cfg: ModelConfig):
+    """(ShapeDtypeStruct params, specs) without allocating anything."""
+    box = {}
+
+    def f(key):
+        params, specs = init_model(key, cfg)
+        box["specs"] = specs
+        return params
+
+    shapes = jax.eval_shape(f, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return shapes, box["specs"]
+
+
+# ---------------------------------------------------------------------------
+# Whole model: forward
+# ---------------------------------------------------------------------------
+
+def _group_factors(n: int) -> tuple:
+    """(G, K, R): n = G*K + R with K ~ sqrt(n) -- hierarchical remat."""
+    if n < 4:
+        return 0, 1, n
+    k = max(2, int(round(n ** 0.5)))
+    g = n // k
+    return g, k, n - g * k
+
+
+def _scan_blocks(p_blocks, cfg, rules, x, positions, states, cache_pos,
+                 enc_out, cross_states, remat: bool):
+    """Hierarchically-scanned stacked periods: outer scan over ~sqrt(L)
+    checkpointed groups of ~sqrt(L) checkpointed periods.  Saved
+    residuals drop from O(L) layer boundaries to O(sqrt(L)) group
+    boundaries + O(sqrt(L)) transient inner boundaries -- without this,
+    the 61-layer 1T config keeps a 13 GB/device activation stack alive.
+
+    states: list per period position of stacked block states (or None).
+    Returns (x, new_states, new_crosses, aux)."""
+    per = len(cfg.pattern)
+    kinds = cfg.layer_kinds
+
+    def period_body(x, xs):
+        ps, sts, cross_sts = xs
+        new_sts, new_crosses, aux_acc = [], [], _zero_aux()
+        for pos in range(per):
+            kind = kinds[pos]
+            win = cfg.window if kind in ("attn", "moe") else None
+            x, ns, nc, aux = apply_block(
+                ps[pos], cfg, rules, kind, x, positions,
+                state=sts[pos], cache_pos=cache_pos, window=win,
+                enc_out=enc_out,
+                cross_state=cross_sts[pos] if cross_sts else None)
+            new_sts.append(ns)
+            new_crosses.append(nc)
+            aux_acc = {k: aux_acc[k] + aux[k] for k in AUX_KEYS}
+        return x, (new_sts, new_crosses, aux_acc)
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    xs = (p_blocks, states, cross_states)
+    n = jax.tree.leaves(p_blocks)[0].shape[0]
+    g, k, r = _group_factors(n)
+
+    ys_parts = []
+    if g:
+        head = jax.tree.map(
+            lambda a: a[:g * k].reshape((g, k) + a.shape[1:]), xs)
+
+        def group_body(x, xs_g):
+            return jax.lax.scan(body, x, xs_g)
+
+        gbody = jax.checkpoint(group_body) if remat else group_body
+        x, ys_h = jax.lax.scan(gbody, x, head)
+        ys_parts.append(jax.tree.map(
+            lambda a: a.reshape((g * k,) + a.shape[2:]), ys_h))
+    if r:
+        tail = jax.tree.map(lambda a: a[g * k:], xs)
+        x, ys_t = jax.lax.scan(body, x, tail)
+        ys_parts.append(ys_t)
+    ys = ys_parts[0] if len(ys_parts) == 1 else jax.tree.map(
+        lambda *aa: jnp.concatenate(aa, axis=0), *ys_parts)
+    new_states, new_crosses, auxes = ys
+    aux = {key: jnp.sum(auxes[key]) for key in AUX_KEYS}
+    return x, new_states, new_crosses, aux
+
+
+def forward(p, cfg: ModelConfig, rules: MeshRules, batch: Dict, *,
+            state=None, cache_pos=None):
+    """Full forward.  Returns (logits, new_state, aux).
+
+    batch keys: "tokens" (B, S) always; "frames" (audio), "patch_embeds"
+    (vlm) when the family needs them.  state/cache_pos enable decode.
+    ``state`` layout: {"blocks": [per period position stacked states],
+    "rest": [...], "cross": [...]} -- see ``init_decode_state``.
+    """
+    tokens = batch["tokens"]
+    b, s_tok = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+
+    x = apply_embedding(p["embed"], tokens, scale=cfg.embed_scale)
+    n_prefix = 0
+    if cfg.n_patches and "patch_embeds" in batch:
+        px = apply_patch_frontend(p["frontend"], batch["patch_embeds"])
+        x = jnp.concatenate([px.astype(dtype), x], axis=1)
+        n_prefix = px.shape[1]
+    if not cfg.use_rope and cfg.encoder_layers:
+        # whisper decoder: sinusoidal absolute positions (computed at the
+        # live offsets -- no table, works at any decode position)
+        pos0 = cache_pos if cache_pos is not None else 0
+        pe = sinusoidal_positions(
+            pos0 + jnp.arange(x.shape[1], dtype=jnp.int32), cfg.d_model)
+        x = x + pe.astype(dtype)[None]
+    x = constrain(x, rules, "batch", "seq", None)
+
+    positions = (jnp.arange(x.shape[1], dtype=jnp.int32)
+                 if cache_pos is None
+                 else cache_pos + jnp.arange(x.shape[1], dtype=jnp.int32))
+
+    # ---- encoder (whisper) ------------------------------------------------
+    enc_out = None
+    if cfg.encoder_layers and "frames" in batch:
+        e = apply_audio_frontend(p["frontend"], batch["frames"])
+        e = constrain(e.astype(dtype), rules, "batch", "seq", None)
+        e_pos = jnp.arange(e.shape[1], dtype=jnp.int32)
+
+        def enc_body(h, lp):
+            h, _, _, _ = apply_block(lp, cfg, rules, "attn", h, e_pos,
+                                     causal=False)
+            return h, None
+
+        body = jax.checkpoint(enc_body) if cfg.remat else enc_body
+        e, _ = jax.lax.scan(body, e, p["enc_blocks"])
+        enc_out = apply_rmsnorm(p["enc_ln_f"], e)
+
+    # ---- decoder stack ------------------------------------------------------
+    state = state or {}
+    blocks_state = state.get("blocks")
+    per = len(cfg.pattern)
+    n_periods, _ = cfg.pattern_periods
+    aux_total = _zero_aux()
+    new_state = {"blocks": None, "rest": [], "cross": state.get("cross")}
+
+    if p["blocks"]:
+        sts = blocks_state if blocks_state is not None else [None] * per
+        x, new_blocks, new_crosses, aux = _scan_blocks(
+            p["blocks"], cfg, rules, x, positions, sts, cache_pos,
+            enc_out, state.get("cross"), cfg.remat)
+        new_state["blocks"] = new_blocks
+        if state.get("cross") is not None:
+            new_state["cross"] = new_crosses
+        aux_total = {k: aux_total[k] + aux[k] for k in AUX_KEYS}
+        kinds_rest = cfg.layer_kinds[n_periods * per:]
+    else:
+        kinds_rest = cfg.layer_kinds
+
+    new_state["cross_rest"] = state.get("cross_rest")
+    rest_states = state.get("rest") or [None] * len(p["rest"])
+    cross_rest = state.get("cross_rest") or [None] * len(p["rest"])
+    new_cross_rest = []
+    for lp, kind, st, cst in zip(p["rest"], kinds_rest, rest_states,
+                                 cross_rest):
+        win = cfg.window if kind in ("attn", "moe") else None
+        fn = jax.checkpoint(partial(
+            apply_block, cfg=cfg, rules=rules, kind=kind,
+            window=win)) if cfg.remat and cache_pos is None else partial(
+            apply_block, cfg=cfg, rules=rules, kind=kind, window=win)
+        x, ns, nc, aux = fn(lp, x=x, positions=positions, state=st,
+                            cache_pos=cache_pos, enc_out=enc_out,
+                            cross_state=cst)
+        new_state["rest"].append(ns)
+        new_cross_rest.append(nc)
+        aux_total = {k: aux_total[k] + aux[k] for k in AUX_KEYS}
+    if state.get("cross_rest") is not None:
+        new_state["cross_rest"] = new_cross_rest
+
+    x = apply_rmsnorm(p["ln_f"], x)
+    if n_prefix and cache_pos is None:
+        x = x[:, n_prefix:]
+    return x, new_state, aux_total
+
+
+def logits(p, x):
+    return logits_from_embedding(p["embed"], x)
+
+
+# ---------------------------------------------------------------------------
+# Decode state
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      abstract: bool = False) -> Dict:
+    dtype = jnp.dtype(cfg.dtype)
+    per = len(cfg.pattern)
+    n_periods, _ = cfg.pattern_periods
+    kinds = cfg.layer_kinds
+    scan = cfg.scan_layers and n_periods > 1
+
+    def stacked(kind):
+        one = block_state_init(cfg, kind, batch, max_len, dtype, abstract)
+        if one is None:
+            return None
+        if abstract:
+            return jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct((n_periods,) + l.shape,
+                                               l.dtype), one)
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n_periods,) + l.shape),
+            one)
+
+    st: Dict[str, Any] = {"blocks": None, "rest": [], "cross": None}
+    if scan:
+        st["blocks"] = [stacked(kinds[pos]) for pos in range(per)]
+        rest_kinds = kinds[n_periods * per:]
+    else:
+        rest_kinds = kinds
+    st["rest"] = [block_state_init(cfg, k, batch, max_len, dtype, abstract)
+                  for k in rest_kinds]
+    if cfg.cross_attn and cfg.encoder_seq:
+        shape = (batch, cfg.encoder_seq, cfg.n_kv_heads,
+                 cfg.resolved_head_dim)
+        mk = (lambda: jax.ShapeDtypeStruct(shape, dtype)) if abstract \
+            else (lambda: jnp.zeros(shape, dtype))
+        ccs = [KVCache(mk(), mk(), False) for _ in range(cfg.n_layers)]
+        if scan:
+            st["cross"] = [jax.tree.map(
+                lambda *ls: (jax.ShapeDtypeStruct(
+                    (n_periods,) + ls[0].shape, ls[0].dtype) if abstract
+                    else jnp.stack(ls)),
+                *[ccs[i * per + pos] for i in range(n_periods)])
+                for pos in range(per)]
+            st["cross_rest"] = ccs[n_periods * per:]
+        else:
+            st["cross_rest"] = ccs
+    return st

@@ -1,0 +1,6 @@
+"""Optimizers, schedules and gradient compression (no external deps)."""
+
+from .optimizers import Optimizer, adamw, adafactor
+from .schedules import warmup_cosine, warmup_rsqrt, constant
+from .compression import (int8_quantize, int8_dequantize,
+                          CompressedAllReduce)

@@ -1,0 +1,184 @@
+"""AdamW and Adafactor, params-as-pytrees, sharding-transparent.
+
+Optimizer state mirrors the param tree, so the same logical-axis specs
+shard it (FSDP shards moments exactly like params).  Adafactor keeps
+factored second moments for >=2D params -- mandatory for the 1T kimi-k2
+config (full Adam moments would be 2 x 2 TB).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    # expressed as a dot so the f32 accumulation happens inside the
+    # contraction -- a dtype=f32 reduce would materialize a whole-leaf
+    # f32 convert (5 GB per expert stack at the 1T scale)
+    def sq(x):
+        # full contraction without reshape: keeps the leaf's sharding
+        # (each shard reduces locally, then a scalar psum)
+        dims = tuple(range(x.ndim))
+        return jax.lax.dot_general(
+            x, x, ((dims, dims), ((), ())),
+            preferred_element_type=jnp.float32)
+    leaves = [sq(x) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _is_spec(t):
+    return isinstance(t, tuple)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable          # params -> opt_state
+    _update: Callable       # (params, grads, state) -> (params, state, gnorm)
+    _state_specs: Callable  # param logical-spec tree -> state spec tree
+
+    def update(self, params, grads, state):
+        return self._update(params, grads, state)
+
+    def abstract_state(self, abstract_params):
+        return jax.eval_shape(self.init, abstract_params)
+
+    def state_specs(self, param_specs):
+        """Logical axis names for the state tree (FSDP shards moments
+        exactly like the params they mirror)."""
+        return self._state_specs(param_specs)
+
+
+def _clipped(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    # keep the gradient dtype: a tree-wide f32 upcast would transiently
+    # double the biggest arrays (fatal at the 1T-param scale)
+    return jax.tree.map(lambda x: (x * scale.astype(x.dtype)), grads), g
+
+
+def _mean_sq(x, axis: int) -> jnp.ndarray:
+    """mean(x^2) over one axis with f32 accumulation, WITHOUT an f32
+    materialization of x (expressed as a contraction)."""
+    dims = ((axis % x.ndim,), (axis % x.ndim,))
+    batch = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+    out = jax.lax.dot_general(x, x, (dims, (batch, batch)),
+                              preferred_element_type=jnp.float32)
+    return out / x.shape[axis]
+
+
+def adamw(lr: Callable, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          clip_norm: float = 1.0, moment_dtype="float32") -> Optimizer:
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        grads, gnorm = _clipped(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = lr(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr_t * upd).astype(p.dtype),
+                    m.astype(mdt), v.astype(mdt))
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(p, g, m, v)
+               for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+    def state_specs(param_specs):
+        return {"m": param_specs, "v": param_specs, "step": ()}
+
+    return Optimizer(init=init, _update=update, _state_specs=state_specs)
+
+
+def adafactor(lr: Callable, *, decay=0.8, eps=1e-30, clip_norm: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Factored second moments over the last two dims of >=2D params."""
+
+    def init(params):
+        def moments(p):
+            if p.ndim >= 2:
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                         jnp.float32)}
+            return {"full": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(moments, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        grads, gnorm = _clipped(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = lr(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(p, g, v):
+            # bf16-native: every full-size intermediate keeps the param
+            # dtype; f32 exists only on the small factored stats.  The
+            # factored denominator is exactly separable:
+            #   1/denom = rsqrt(row_hat) (x) rsqrt(col_hat / mean_row)
+            if p.ndim >= 2:
+                row = beta * v["row"] + (1 - beta) * (_mean_sq(g, -1) + eps)
+                col = beta * v["col"] + (1 - beta) * (_mean_sq(g, -2) + eps)
+                rinv = jax.lax.rsqrt(row + eps)
+                cinv = jax.lax.rsqrt(
+                    col / (jnp.mean(row, axis=-1, keepdims=True) + eps)
+                    + eps)
+                # cast the small factors BEFORE the outer product: the
+                # f32 (L,E,d,f) product would materialize whole-stack
+                u = (g * rinv.astype(g.dtype)[..., None]) \
+                    * cinv.astype(g.dtype)[..., None, :]
+                nv = {"row": row, "col": col}
+            else:
+                full = beta * v["full"] + (1 - beta) * (
+                    jnp.square(g.astype(jnp.float32)) + eps)
+                u = (g.astype(jnp.float32)
+                     * jax.lax.rsqrt(full + eps)).astype(g.dtype)
+                nv = {"full": full}
+            # relative-scale update clipping (adafactor's d=1.0 rule);
+            # rms via contraction (f32 accumulate, no f32 upcast)
+            dims = tuple(range(u.ndim))
+            sq = jax.lax.dot_general(u, u, ((dims, dims), ((), ())),
+                                     preferred_element_type=jnp.float32)
+            rms = jnp.sqrt(sq / float(u.size) + 1e-12)
+            u = u * (lr_t / jnp.maximum(1.0, rms)).astype(u.dtype)
+            decay = (1.0 - lr_t * weight_decay).astype(p.dtype)
+            return (p * decay - u.astype(p.dtype), nv)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[1] for o in out])
+        return new_p, {"v": new_v, "step": step}, gnorm
+
+    def state_specs(param_specs):
+        def moments(names):
+            if len(names) >= 2:
+                return {"row": names[:-1], "col": names[:-2] + names[-1:]}
+            return {"full": names}
+        return {"v": jax.tree.map(moments, param_specs, is_leaf=_is_spec),
+                "step": ()}
+
+    return Optimizer(init=init, _update=update, _state_specs=state_specs)

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (step -> lr, traceable)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int,
+                  floor_frac: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def warmup_rsqrt(peak: float, warmup: int):
+    def lr(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return peak * jnp.minimum(s / max(warmup, 1),
+                                  jnp.sqrt(warmup / s))
+    return lr

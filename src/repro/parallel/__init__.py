@@ -1,0 +1,4 @@
+"""Sharding rules: logical axis names -> mesh axes (DP/FSDP/TP/EP/SP)."""
+
+from .sharding import (MeshRules, SINGLE_POD_RULES, MULTI_POD_RULES,
+                       rules_for_mesh, constrain)

@@ -1,0 +1,103 @@
+"""Logical-axis sharding rules for the LM stack.
+
+Every parameter and activation is annotated with *logical* axis names;
+``MeshRules`` maps them onto mesh axes.  Changing parallelism = changing
+one rule, not touching model code -- this is where the perf hillclimb
+turns its knobs (sharding is the paper's own subject matter: who owns
+which slice of the problem, and what must be communicated).
+
+Default mapping (TPU v5e pod, mesh ("data", "model") = (16, 16)):
+
+  batch          -> ("pod","data")   data parallelism (pod extends DP)
+  fsdp (params)  -> "data"           FSDP: params/opt-state sharded over
+                                     DP peers *within* a pod, gathered
+                                     per layer (cross-pod stays pure DP)
+  heads          -> "model"          tensor parallelism (when divisible)
+  mlp / experts  -> "model"          TP for dense FFN, EP for MoE
+  vocab          -> "model"          vocab-parallel embedding + logits
+  kv_seq         -> "model"          decode-time KV caches shard their
+                                     sequence dim (flash-decoding style)
+  seq            -> None             (SP hillclimb knob for prefill)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    batch: Axis = ("pod", "data")
+    fsdp: Axis = "data"
+    heads: Axis = "model"
+    kv_heads: Axis = None
+    mlp: Axis = "model"
+    experts: Axis = "model"
+    vocab: Axis = "model"
+    seq: Axis = None            # sequence parallelism for activations
+    kv_seq: Axis = "model"      # decode KV-cache sequence sharding
+    d_inner: Axis = "model"     # SSM / RG-LRU channel dim
+    stack: Axis = None          # stacked-layer leading dim
+    # concrete mesh: when set, constraints are NamedShardings (bare
+    # PartitionSpecs are silently unusable without an ambient mesh)
+    mesh: Optional[Mesh] = None
+
+    def axis(self, logical: Optional[str]) -> Axis:
+        if logical is None:
+            return None
+        try:
+            return getattr(self, logical)
+        except AttributeError:
+            raise KeyError(f"unknown logical axis {logical!r}")
+
+    def pspec(self, *logical: Optional[str]) -> P:
+        return P(*(self.axis(l) for l in logical))
+
+    def nsharding(self, *logical: Optional[str]):
+        """NamedSharding when a mesh is attached, else None (tests)."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(*logical))
+
+    def spec_tree(self, logical_tree):
+        """Map a pytree of logical-name tuples to PartitionSpecs."""
+        return jax.tree.map(
+            lambda names: self.pspec(*names), logical_tree,
+            is_leaf=lambda x: isinstance(x, tuple))
+
+    def shardings(self, logical_tree, mesh: Mesh):
+        return jax.tree.map(
+            lambda names: NamedSharding(mesh, self.pspec(*names)),
+            logical_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _mesh_axes(mesh_or_axes) -> tuple:
+    if isinstance(mesh_or_axes, Mesh):
+        return tuple(mesh_or_axes.axis_names)
+    return tuple(mesh_or_axes)
+
+
+SINGLE_POD_RULES = MeshRules(batch="data")
+MULTI_POD_RULES = MeshRules(batch=("pod", "data"))
+
+
+def rules_for_mesh(mesh_or_axes, **overrides) -> MeshRules:
+    axes = _mesh_axes(mesh_or_axes)
+    base = MULTI_POD_RULES if "pod" in axes else SINGLE_POD_RULES
+    if isinstance(mesh_or_axes, Mesh):
+        overrides = dict(overrides, mesh=mesh_or_axes)
+    return dataclasses.replace(base, **overrides) if overrides else base
+
+
+def constrain(x, rules: MeshRules, *logical: Optional[str]):
+    """with_sharding_constraint by logical names (no-op without a mesh)."""
+    sh = rules.nsharding(*logical)
+    if sh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)

@@ -1,0 +1,4 @@
+"""Roofline tooling: loop-aware HLO cost analysis + hardware model."""
+
+from .hlo_analysis import analyze_hlo, Costs
+from .roofline import (HW, roofline_terms, model_flops, RooflineReport)

@@ -1,0 +1,60 @@
+"""Kernelized-attention memory credit.
+
+The dry-run lowers attention in its pure-jnp chunked form, whose
+(cq, ck) score/probability chunks round-trip HBM -- that is what the
+analyzer (correctly) counts.  On the TPU target the validated Pallas
+flash kernel (kernels/flash_attention.py) keeps those chunks in VMEM:
+HBM traffic reduces to the q/k/v/out streams (+ L stats).
+
+This module computes the per-device HBM bytes of those intermediate
+chunks analytically, so the roofline can report both:
+
+    memory_s (as compiled)       -- jnp-chunked lowering
+    memory_s (flash kernel)      -- minus the VMEM-resident traffic
+
+The credit is exact arithmetic over the same chunk loop the code runs:
+per (q-chunk, k-chunk) pair the jnp path materializes s, mask-select, p
+(f32, cq x ck) on the forward, and s, p, dp, ds on the backward, for
+every (batch, head) slice on the device; the kernel writes none of them.
+"""
+
+from __future__ import annotations
+
+from ..models.config import ModelConfig, ShapeConfig
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    return sum(1 for k in cfg.layer_kinds if k in ("attn", "moe")) + \
+        cfg.encoder_layers + (cfg.n_layers if cfg.cross_attn else 0)
+
+
+def chunk_traffic_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                        chips: int = 256, model_axis: int = 16,
+                        microbatches: int = 1) -> float:
+    """Per-device HBM bytes of attention (cq, ck) intermediates."""
+    if shape.is_decode:
+        return 0.0                       # decode path has no chunk loop
+    s = shape.seq_len
+    if cfg.window:
+        s_k_eff = min(cfg.window * 2, s)     # block-sparse liveness
+    else:
+        s_k_eff = s
+    cq = min(cfg.attn_chunk_q, s)
+    ck = min(cfg.attn_chunk_k, s)
+    nq = -(-s // cq)
+    nk = -(-s_k_eff // ck) if not cfg.window else -(-s_k_eff // ck)
+    # causal: ~half the (q, k) pairs are live
+    live_pairs = nq * nk / 2 if not cfg.window else nq * min(nk, 3)
+
+    b_local = max(shape.global_batch // (chips // model_axis), 1)
+    b_local = max(b_local // microbatches, 1)
+    heads_sharded = cfg.n_heads % model_axis == 0
+    h_local = cfg.n_heads // model_axis if heads_sharded else cfg.n_heads
+
+    chunk_bytes = cq * ck * 4.0              # one f32 (cq, ck) tensor
+    # forward: s + p (2 tensors, write+read each -> 4 passes);
+    # backward: s, p, dp, ds (4 tensors -> 8 passes);
+    # + remat replays forward once inside jax.checkpoint (4 more)
+    passes = 4 + (8 + 4 if shape.kind == "train" else 0)
+    per_layer = live_pairs * b_local * h_local * chunk_bytes * passes
+    return per_layer * _attn_layers(cfg) * microbatches

@@ -1,0 +1,386 @@
+"""Loop-aware cost analysis of compiled (SPMD-partitioned) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body
+**once**, but the whole framework leans on ``lax.scan`` (layer stacks,
+attention chunking, loss chunking, SSM chunking), so XLA's own numbers
+under-count by orders of magnitude.  XLA does annotate every counted
+loop with ``backend_config={"known_trip_count":{"n":"N"}}`` -- this
+module parses the HLO text, walks the call graph (fusions, while
+bodies, to_apply reducers), and weights every computation by the product
+of enclosing trip counts.
+
+Outputs per-device totals:
+  * ``flops``        -- dots counted exactly from shapes + contracting
+                        dims; elementwise ops approximated as 1 flop per
+                        output element;
+  * ``bytes``        -- operand + result bytes at fusion boundaries
+                        (mirrors XLA's "bytes accessed" convention);
+  * ``coll_bytes``   -- wire bytes of collectives, with standard ring
+                        cost conventions: all-gather/all-to-all
+                        (s-1)/s x result, all-reduce 2(s-1)/s x result,
+                        reduce-scatter (s-1) x result, permute 1 x;
+  * ``coll_by_kind`` -- breakdown for the roofline's collective term.
+
+This is a structural estimator, not a simulator: it is used for
+*relative* hillclimbing deltas and absolute roofline terms at the
++/-10% level, which the dry-run workflow needs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# async variants: <op>-start carries the cost, <op>-done is free
+_COLLECTIVE_STARTS = tuple(c + "-start" for c in COLLECTIVES)
+
+_ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "rsqrt", "sqrt", "tanh", "logistic", "negate",
+    "abs", "floor", "ceil", "round-nearest-afz", "select", "compare",
+    "and", "or", "not", "xor", "clamp", "sine", "cosine", "expm1",
+    "log1p", "sign", "convert", "reduce", "exponential-minus-one",
+}
+
+# ops a TPU fusion absorbs: no HBM traffic of their own -- reads resolve
+# through them to the nearest materialized producer
+_FUSABLE_OPS = _ELEMENTWISE_FLOP_OPS | {
+    "broadcast", "copy", "transpose", "pad", "slice", "reverse", "iota",
+    "concatenate", "bitcast-convert", "reduce-precision", "tan", "erf",
+    "cbrt", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "popcnt", "clz", "real", "imag", "is-finite", "atan2", "rem",
+}
+
+_ZERO_COST_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "after-all", "partition-id", "replica-id", "rng-state",
+    "opt-barrier", "all-reduce-done", "all-gather-done",
+    "collective-permute-done", "all-to-all-done", "reduce-scatter-done",
+    "copy-start", "copy-done", "send", "send-done", "recv", "recv-done",
+}
+
+
+@dataclasses.dataclass
+class Shape:
+    dtype: str
+    dims: Tuple[int, ...]
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        return self.elems * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    dot_flops: float = 0.0
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+    def add(self, other: "Costs", weight: float = 1.0):
+        self.flops += other.flops * weight
+        self.bytes += other.bytes * weight
+        self.coll_bytes += other.coll_bytes * weight
+        self.dot_flops += other.dot_flops * weight
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * weight
+        self.notes.extend(n for n in other.notes if n not in self.notes)
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_shape(s: str) -> Optional[Shape]:
+    m = _SHAPE_RE.match(s.strip())
+    if not m:
+        return None
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return Shape(m.group(1), dims)
+
+
+def _parse_shapes(s: str) -> List[Shape]:
+    """Parse 'f32[2,3]{1,0}' or '(f32[2], s32[])' into shapes."""
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        if m.group(1) in _DTYPE_BYTES or m.group(1) in (
+                "f32", "bf16", "s32"):
+            out.append(Shape(m.group(1), dims))
+    return out
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    op: str
+    shapes: List[Shape]             # result shape(s)
+    operands: List[str]             # %names
+    attrs: str                      # raw attr tail
+
+    @property
+    def out_bytes(self) -> int:
+        return sum(s.bytes for s in self.shapes)
+
+    @property
+    def out_elems(self) -> int:
+        return sum(s.elems for s in self.shapes)
+
+
+_COMP_HEADER = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s+=\s+(.*)$")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+
+
+def _split_rhs(rhs: str) -> Tuple[str, str, str, str]:
+    """rhs -> (shape_str, op, operand_str, attr_str)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        shape_str, rest = rhs[:i + 1], rhs[i + 1:].strip()
+    else:
+        sp = rhs.find(" ")
+        shape_str, rest = rhs[:sp], rhs[sp + 1:]
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return shape_str, rest.split("(")[0], "", ""
+    op = m.group(1)
+    depth, start = 0, m.end() - 1
+    for i in range(start, len(rest)):
+        depth += rest[i] == "("
+        depth -= rest[i] == ")"
+        if depth == 0:
+            break
+    return shape_str, op, rest[start + 1:i], rest[i + 1:]
+
+
+def parse_computations(txt: str) -> Dict[str, dict]:
+    """Line-based: computation headers start at column 0 (instructions
+    are indented); params may contain nested tuple-typed parens."""
+    comps: Dict[str, dict] = {}
+    cur: Optional[dict] = None
+    for line in txt.splitlines():
+        if line and not line[0].isspace():
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                params: Dict[str, Shape] = {}
+                for pm in re.finditer(r"([\w\.\-]+):\s*([\w\[\],]+)",
+                                      m.group(3)):
+                    sh = _parse_shape(pm.group(2))
+                    if sh:
+                        params[pm.group(1)] = sh
+                cur = {"params": params, "instrs": [],
+                       "entry": bool(m.group(1))}
+                comps[m.group(2)] = cur
+            else:
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        shape_str, op, opnd, attrs = _split_rhs(m.group(2))
+        cur["instrs"].append(Instruction(
+            name=m.group(1), op=op, shapes=_parse_shapes(shape_str),
+            operands=_OPERAND.findall(opnd), attrs=attrs))
+    return comps
+
+
+def _group_size(attrs: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _dot_flops(instr: Instruction, shapes_of) -> float:
+    out = instr.shapes[0]
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+    lhs_sh = shapes_of(instr.operands[0]) if instr.operands else None
+    if lhs_sh is None or not m:
+        return 2.0 * out.elems        # degraded estimate
+    contract = 1
+    for d in (int(x) for x in m.group(1).split(",") if x):
+        if d < len(lhs_sh.dims):
+            contract *= lhs_sh.dims[d]
+    return 2.0 * out.elems * contract
+
+
+def _trip_count(attrs: str) -> Optional[int]:
+    m = re.search(r'known_trip_count[="\{:]+n[":]+(\d+)', attrs)
+    return int(m.group(1)) if m else None
+
+
+def analyze_hlo(txt: str) -> Costs:
+    comps = parse_computations(txt)
+    entry = next((n for n, c in comps.items() if c["entry"]), None)
+    memo: Dict[Tuple[str, bool], Costs] = {}
+
+    def called_names(attrs: str) -> Dict[str, str]:
+        out = {}
+        for key in ("calls", "condition", "body", "to_apply",
+                    "branch_computations"):
+            m = re.search(key + r"=\{?%?([\w\.\-]+)", attrs)
+            if m:
+                out[key] = m.group(1)
+        return out
+
+    def comp_cost(name: str, boundary_only: bool = False) -> Costs:
+        key = (name, boundary_only)
+        if key in memo:
+            return memo[key]
+        memo[key] = Costs()              # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        table: Dict[str, Shape] = dict(comp["params"])
+        producer: Dict[str, Instruction] = {}
+        for ins in comp["instrs"]:
+            if ins.shapes:
+                table[ins.name] = ins.shapes[0]
+            producer[ins.name] = ins
+
+        def shapes_of(op_name):
+            return table.get(op_name)
+
+        def resolved_bytes(op_name, depth=0) -> float:
+            """Read cost of an operand on the TPU target: fusable
+            elementwise/layout chains (incl. the f32 shadows XLA:CPU's
+            bf16 legalization inserts) resolve to the bytes of the
+            nearest *materialized* ancestor."""
+            ins = producer.get(op_name)
+            if ins is None:              # computation parameter
+                sh = table.get(op_name)
+                return sh.bytes if sh else 0.0
+            if ins.op in _FUSABLE_OPS and depth < 24:
+                if ins.operands:
+                    return max((resolved_bytes(o, depth + 1)
+                                for o in ins.operands[:3]), default=0.0)
+                return 0.0
+            if ins.op in ("dynamic-slice",):
+                return ins.out_bytes
+            return ins.out_bytes if ins.shapes else 0.0
+
+        total = Costs()
+        for ins in comp["instrs"]:
+            op = ins.op
+            if op in _ZERO_COST_OPS:
+                continue
+            called = called_names(ins.attrs)
+            operand_bytes = sum(resolved_bytes(o) for o in ins.operands
+                                if o in table)
+            if op == "while":
+                trips = _trip_count(ins.attrs) or 1
+                if _trip_count(ins.attrs) is None:
+                    total.notes.append(f"while {ins.name}: unknown trip "
+                                       "count, weighted 1")
+                body = comp_cost(called.get("body", ""), False)
+                total.add(body, trips)
+                continue
+            if op in COLLECTIVES or op in _COLLECTIVE_STARTS:
+                kind = op.replace("-start", "")
+                # wire bytes at the *pre-legalization* width: resolve
+                # through converts (TPU moves bf16, CPU-HLO shows f32)
+                size = min(float(ins.out_bytes) if ins.shapes else 0.0,
+                           operand_bytes
+                           or (float(ins.out_bytes) if ins.shapes else 0.0))
+                if kind == "all-gather":
+                    size = float(ins.out_bytes) if ins.shapes else 0.0
+                g = _group_size(ins.attrs)
+                if kind == "all-reduce":
+                    wire = 2.0 * size * (g - 1) / g
+                elif kind == "reduce-scatter":
+                    wire = size * (g - 1)
+                elif kind == "collective-permute":
+                    wire = size
+                else:                    # all-gather / all-to-all
+                    wire = size * (g - 1) / g
+                total.coll_bytes += wire
+                total.coll_by_kind[kind] = \
+                    total.coll_by_kind.get(kind, 0.0) + wire
+                total.bytes += size + operand_bytes
+                continue
+            if op == "fusion":
+                inner = comp_cost(called.get("calls", ""), True)
+                total.flops += inner.flops
+                total.dot_flops += inner.dot_flops
+                total.bytes += ins.out_bytes + operand_bytes
+                continue
+            if op in ("call", "conditional", "sort", "map", "scatter",
+                      "reduce", "reduce-window", "select-and-scatter"):
+                for cn in called.values():
+                    inner = comp_cost(cn, True)
+                    total.flops += inner.flops * max(ins.out_elems, 1) \
+                        if op in ("map",) else inner.flops
+                    total.dot_flops += inner.dot_flops
+                total.bytes += ins.out_bytes + operand_bytes
+                total.flops += ins.out_elems
+                continue
+            if op == "dynamic-slice":
+                # reads only the slice; do not charge the full operand
+                total.bytes += 2 * ins.out_bytes
+                continue
+            if op == "dynamic-update-slice":
+                # in-place region write: charge the update region r/w
+                upd = (table.get(ins.operands[1])
+                       if len(ins.operands) > 1 else None)
+                total.bytes += 2 * (upd.bytes if upd else ins.out_bytes)
+                continue
+            if op == "dot":
+                f = _dot_flops(ins, shapes_of)
+                total.flops += f
+                total.dot_flops += f
+                total.bytes += ins.out_bytes + operand_bytes
+                continue
+            if op == "convolution":
+                # depthwise/pointwise convs in the stubs; approximate
+                total.flops += 2.0 * ins.out_elems
+                total.bytes += ins.out_bytes + operand_bytes
+                continue
+            if op == "custom-call":
+                total.notes.append(f"custom-call: {ins.attrs[:60]}")
+                total.bytes += ins.out_bytes + operand_bytes
+                continue
+            if op == "gather":
+                total.bytes += 2 * ins.out_bytes
+                continue
+            # elementwise & layout ops: flops yes, bytes no (they fuse
+            # into their materializing consumers on the TPU target)
+            if op in _ELEMENTWISE_FLOP_OPS:
+                total.flops += ins.out_elems
+        memo[key] = total
+        return total
+
+    if entry is None:
+        return Costs(notes=["no entry computation found"])
+    return comp_cost(entry, False)

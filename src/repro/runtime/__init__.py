@@ -1,0 +1,3 @@
+"""Fault-tolerant training runtime."""
+
+from .driver import TrainDriver, DriverConfig, StragglerWatchdog

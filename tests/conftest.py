@@ -1,0 +1,12 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here -- unit tests must see the
+real single CPU device; multi-device behaviour is tested via
+subprocesses (tests/test_multidevice.py) so the device count never
+leaks into this process."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

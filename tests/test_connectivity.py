@@ -1,0 +1,90 @@
+"""Connectivity laws: the paper's own numbers + property tests."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.connectivity import (ConnectivityLaw, exponential_law,
+                                     gaussian_law, expected_synapse_counts,
+                                     NEURONS_PER_COLUMN)
+
+
+def test_paper_stencils():
+    assert gaussian_law().radius == 3            # 7x7
+    assert gaussian_law().stencil_width == 7
+    assert exponential_law().radius == 10        # 21x21
+    assert exponential_law().stencil_width == 21
+
+
+def test_paper_cutoff_distances():
+    # DESIGN.md section 2 derivation
+    assert gaussian_law().r_cut_um == pytest.approx(279.7, abs=0.5)
+    assert exponential_law().r_cut_um == pytest.approx(986.4, abs=0.5)
+
+
+@pytest.mark.parametrize("grid,law,recur_g,total_g", [
+    ((24, 24), "gaussian", 0.9, 1.2),
+    ((24, 24), "exponential", 1.5, 1.8),
+    ((48, 48), "gaussian", 3.5, 5.0),
+    ((48, 48), "exponential", 5.9, 7.4),
+    ((96, 96), "gaussian", 14.2, 20.4),
+    ((96, 96), "exponential", 23.4, 29.6),
+])
+def test_table1_synapse_counts(grid, law, recur_g, total_g):
+    """Reproduce paper Table 1 within 10% (the paper rounds to 0.1G)."""
+    l = gaussian_law() if law == "gaussian" else exponential_law()
+    c = expected_synapse_counts(l, *grid)
+    assert c["recurrent_synapses"] / 1e9 == pytest.approx(recur_g, rel=0.10)
+    assert c["total_synapses"] / 1e9 == pytest.approx(total_g, rel=0.10)
+
+
+def test_paper_per_neuron_counts():
+    g = expected_synapse_counts(gaussian_law(), 96, 96)
+    e = expected_synapse_counts(exponential_law(), 96, 96)
+    # ~990 local + ~250 remote (gaussian), >1000 remote (exponential)
+    assert g["remote_per_neuron"] == pytest.approx(250, rel=0.15)
+    assert e["remote_per_neuron"] > 1000
+    assert g["recurrent_per_neuron"] == pytest.approx(1240, rel=0.1)
+    assert e["recurrent_per_neuron"] == pytest.approx(2050, rel=0.1)
+
+
+def test_neurons_match_paper():
+    assert expected_synapse_counts(gaussian_law(), 24, 24)["neurons"] == \
+        576 * NEURONS_PER_COLUMN  # 0.71M
+
+
+@given(st.floats(0.001, 0.2), st.floats(50.0, 500.0),
+       st.sampled_from(["gaussian", "exponential"]))
+@settings(max_examples=50, deadline=None)
+def test_prob_monotone_decreasing(a, scale, kind):
+    law = ConnectivityLaw(kind=kind, amplitude=a, scale_um=scale)
+    r = np.linspace(0.0, 3000.0, 200)
+    p = law.prob(r)
+    assert (np.diff(p) <= 1e-12).all()
+    assert (p <= a + 1e-12).all() and (p >= 0).all()
+
+
+@given(st.floats(0.002, 0.2), st.floats(50.0, 500.0),
+       st.sampled_from(["gaussian", "exponential"]))
+@settings(max_examples=50, deadline=None)
+def test_cutoff_consistency(a, scale, kind):
+    """p(r) > cutoff exactly inside r_cut; stencil covers r_cut."""
+    law = ConnectivityLaw(kind=kind, amplitude=a, scale_um=scale)
+    rc = law.r_cut_um
+    if rc > 0:
+        assert law.prob(rc * 0.999) > 0
+        assert law.prob(rc * 1.001) == 0
+    assert law.radius >= math.floor(rc / law.alpha_um)
+
+
+@given(st.sampled_from(["gaussian", "exponential"]))
+@settings(max_examples=10, deadline=None)
+def test_stencil_symmetry(kind):
+    law = gaussian_law() if kind == "gaussian" else exponential_law()
+    off = law.stencil_offsets()
+    s = {(int(y), int(x)) for y, x in off}
+    assert (0, 0) not in s
+    for y, x in list(s):
+        assert (-y, -x) in s and (x, y) in s      # 8-fold symmetry

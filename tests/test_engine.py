@@ -1,0 +1,107 @@
+"""Single-shard engine: dynamics, modes, plasticity, rate separation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.connectivity import exponential_law, gaussian_law
+from repro.core.engine import (EngineConfig, build_shard_tables,
+                               firing_rate_hz, init_plasticity,
+                               init_sim_state, run, run_plastic)
+from repro.core.grid import ColumnGrid, TileDecomposition
+from repro.core.neuron import LIFParams, init_state, lif_sfa_step
+from repro.core.stdp import STDPParams
+
+
+def _cfg(law=None, n_per_col=50, grid=4, **kw):
+    law = law or gaussian_law()
+    d = TileDecomposition(grid=ColumnGrid(grid, grid, n_per_col),
+                          tiles_y=1, tiles_x=1, radius=law.radius)
+    return EngineConfig(decomp=d, law=law, **kw)
+
+
+def test_neuron_refractory_and_reset():
+    p = LIFParams()
+    st = {"v": jnp.asarray([25.0, 5.0]), "c": jnp.zeros(2),
+          "refrac": jnp.asarray([0, 0], jnp.int32)}
+    new, spk = lif_sfa_step(st, jnp.zeros(2), p)
+    assert spk[0] == 1.0 and spk[1] == 0.0
+    assert new["v"][0] == p.v_reset_mv
+    assert new["refrac"][0] == p.refrac_steps
+    assert new["c"][0] == pytest.approx(p.alpha_c)
+    # refractory neuron cannot spike even under huge drive
+    new2, spk2 = lif_sfa_step(new, jnp.asarray([100.0, 0.0]), p)
+    assert spk2[0] == 0.0 and new2["refrac"][0] == p.refrac_steps - 1
+
+
+def test_run_no_nan_and_reasonable_rate():
+    cfg = _cfg()
+    tabs = build_shard_tables(cfg)
+    st = init_sim_state(cfg)
+    st2, per_step = jax.jit(lambda s: run(s, tabs, cfg, 200))(st)
+    assert np.isfinite(np.asarray(st2["neuron"]["v"])).all()
+    rate = firing_rate_hz(st2, cfg, 200)
+    assert 0.1 < rate < 100.0
+    assert float(st2["metrics"]["dropped"]) == 0.0
+
+
+def test_event_mode_equals_gather_all_dynamics():
+    """Same seed, same tables: the two delivery modes must produce the
+    exact same spike trains (event-driven is an optimization, not an
+    approximation)."""
+    cfg_e = _cfg(mode="event")
+    cfg_g = _cfg(mode="gather_all")
+    tabs = build_shard_tables(cfg_e)
+    s_e, spikes_e = jax.jit(lambda s: run(s, tabs, cfg_e, 100))(
+        init_sim_state(cfg_e))
+    s_g, spikes_g = jax.jit(lambda s: run(s, tabs, cfg_g, 100))(
+        init_sim_state(cfg_g))
+    np.testing.assert_array_equal(np.asarray(spikes_e),
+                                  np.asarray(spikes_g))
+    assert float(s_e["metrics"]["events"]) == \
+        float(s_g["metrics"]["events"])
+
+
+def test_rate_separation_exponential_vs_gaussian():
+    """Paper section 2: identical parameters, only the connectivity law
+    changes -> the exponential net fires at a higher rate (32-38 Hz vs
+    7.5 Hz at full scale; at reduced scale we assert the ordering)."""
+    rates = {}
+    for name, law in [("gauss", gaussian_law()), ("expo", exponential_law())]:
+        # grid must be big enough that the 21-column exponential stencil
+        # is not fully edge-truncated (8x8 gives a ~1.7x separation;
+        # the ratio grows toward the paper's ~4.5x with grid size)
+        cfg = _cfg(law=law, n_per_col=60, grid=8)
+        tabs = build_shard_tables(cfg)
+        st, _ = jax.jit(lambda s, c=cfg, t=tabs: run(s, t, c, 300))(
+            init_sim_state(cfg))
+        rates[name] = firing_rate_hz(st, cfg, 300)
+    assert rates["expo"] > 1.4 * rates["gauss"], rates
+
+
+def test_stdp_potentiation_depression_ordering():
+    """Pair-based STDP sign: pre->post potentiates, post->pre depresses."""
+    cfg = _cfg(n_per_col=30, stdp=STDPParams(a_plus=0.01, a_minus=0.01))
+    tabs = build_shard_tables(cfg)
+    aux = init_plasticity(tabs, cfg)
+    w0 = np.asarray(tabs["local"]["w"]).copy()
+    st = init_sim_state(cfg)
+    (st2, tabs2, traces), _ = jax.jit(
+        lambda s, t: run_plastic(s, t, aux, cfg, 120))(st, tabs)
+    w1 = np.asarray(tabs2["local"]["w"])
+    assert np.abs(w1 - w0).sum() > 0
+    plastic = w0 > 0
+    assert (w1[plastic] >= -1e-6).all()
+    assert (w1[plastic] <= cfg.stdp.w_max + 1e-6).all()
+    np.testing.assert_array_equal(w1[~plastic], w0[~plastic])
+
+
+def test_external_drive_scales_with_rate():
+    from repro.core.engine import external_drive
+    key = jax.random.PRNGKey(0)
+    cfg_lo = _cfg(ext_rate_hz=1.0)
+    cfg_hi = _cfg(ext_rate_hz=30.0)
+    lo = float(jnp.sum(external_drive(key, 5000, cfg_lo)))
+    hi = float(jnp.sum(external_drive(key, 5000, cfg_hi)))
+    assert hi > 10 * lo

@@ -1,0 +1,141 @@
+"""Tile decomposition + synapse-table invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.connectivity import ConnectivityLaw, gaussian_law
+from repro.core.grid import ColumnGrid, TileDecomposition
+from repro.core.synapses import (SynapseTableSpec, _pack_rows, build_tables,
+                                 deliver_events, deliver_gather_all)
+
+
+@given(st.integers(2, 40), st.integers(2, 40), st.integers(1, 5),
+       st.integers(1, 5), st.integers(1, 10))
+@settings(max_examples=60, deadline=None)
+def test_tiles_cover_grid(h, w, ty, tx, radius):
+    d = TileDecomposition(grid=ColumnGrid(h, w, 10), tiles_y=ty,
+                          tiles_x=tx, radius=radius)
+    assert d.padded_h >= h and d.padded_w >= w
+    covered = np.zeros((d.padded_h, d.padded_w), dtype=int)
+    active_total = 0
+    for yy in range(ty):
+        for xx in range(tx):
+            oy, ox = d.tile_origin(yy, xx)
+            covered[oy:oy + d.tile_h, ox:ox + d.tile_w] += 1
+            active_total += d.active_mask(yy, xx).sum()
+    assert (covered == 1).all()                  # exact partition
+    assert active_total == h * w                 # every live column once
+    assert d.halo_hops_y == -(-radius // d.tile_h)
+
+
+def test_halo_import_volume_grows_with_radius():
+    g = ColumnGrid(48, 48, 100)
+    d3 = TileDecomposition(grid=g, tiles_y=8, tiles_x=8, radius=3)
+    d10 = TileDecomposition(grid=g, tiles_y=8, tiles_x=8, radius=10)
+    assert d10.comm_volume_per_step_bytes() > \
+        2 * d3.comm_volume_per_step_bytes()
+
+
+def test_pack_rows_roundtrip(rng):
+    n_rows, cap = 17, 9
+    m = 60
+    rows = rng.integers(0, n_rows, m)
+    tgts = rng.integers(0, 100, m)
+    ws = rng.normal(size=m)
+    ds = rng.integers(1, 7, m).astype(np.int8)
+    tab, clipped = _pack_rows(n_rows, cap, rows, tgts, ws, ds, np.float32)
+    assert tab["tgt"].shape == (n_rows + 1, cap)
+    counts = np.bincount(rows, minlength=n_rows)
+    assert clipped == np.maximum(counts - cap, 0).sum()
+    assert (tab["nnz"][:-1] == np.minimum(counts, cap)).all()
+    assert tab["nnz"][-1] == 0                  # sink row empty
+    # every stored weight belongs to its row's input set (f32 tolerance)
+    for r in range(n_rows):
+        stored = np.asarray(tab["w"][r][:tab["nnz"][r]])
+        allowed = ws[rows == r].astype(np.float32)
+        for s in stored:
+            assert np.abs(allowed - s).min() < 1e-6
+
+
+def _tiny_tables(rng, n_local=40, cap=8, d_ring=4):
+    rows = n_local
+    tgt = rng.integers(0, n_local, (rows + 1, cap)).astype(np.int32)
+    w = rng.normal(size=(rows + 1, cap)).astype(np.float32)
+    nnz = rng.integers(0, cap + 1, rows + 1).astype(np.int32)
+    k = np.arange(cap)[None, :]
+    w = np.where(k < nnz[:, None], w, 0.0)      # pad zero like _pack_rows
+    tgt = np.where(k < nnz[:, None], tgt, 0)
+    ds = rng.integers(1, d_ring, (rows + 1, cap)).astype(np.int8)
+    w[-1] = 0
+    nnz[-1] = 0
+    return {k2: jnp.asarray(v) for k2, v in
+            dict(tgt=tgt, w=w, dslot=ds, nnz=nnz).items()}
+
+
+def test_event_equals_gather_all(rng):
+    """The paper's two delivery regimes must agree synapse-for-synapse."""
+    tabs = _tiny_tables(rng)
+    n_local, d_ring = 40, 4
+    spikes = (rng.random(n_local) < 0.3).astype(np.float32)
+    ring = rng.normal(size=(d_ring, n_local)).astype(np.float32)
+    out_gather = deliver_gather_all(tabs, jnp.asarray(spikes),
+                                    jnp.asarray(ring), jnp.int32(1), d_ring)
+    out_event, n_ev, n_drop = deliver_events(
+        tabs, jnp.asarray(spikes), jnp.asarray(ring), jnp.int32(1),
+        d_ring, active_cap=n_local)
+    np.testing.assert_allclose(out_gather, out_event, rtol=1e-5, atol=1e-6)
+    assert int(n_drop) == 0
+    nnz = np.asarray(tabs["nnz"][:n_local])
+    assert int(n_ev) == int((nnz * spikes).sum())
+
+
+def test_event_current_conservation(rng):
+    """Sum of ring increments == sum of delivered weights (paper's
+    synaptic-event bookkeeping)."""
+    tabs = _tiny_tables(rng)
+    n_local, d_ring = 40, 4
+    spikes = (rng.random(n_local) < 0.5).astype(np.float32)
+    ring0 = np.zeros((d_ring, n_local), np.float32)
+    out, _, _ = deliver_events(tabs, jnp.asarray(spikes),
+                               jnp.asarray(ring0), jnp.int32(0), d_ring,
+                               active_cap=n_local)
+    w = np.asarray(tabs["w"])[:n_local]
+    expected = (w * spikes[:, None]).sum()
+    assert float(jnp.sum(out)) == pytest.approx(float(expected), rel=1e-5)
+
+
+def test_build_tables_counts_match_expectation(rng):
+    law = gaussian_law()
+    grid = ColumnGrid(6, 6, 40)
+    d = TileDecomposition(grid=grid, tiles_y=2, tiles_x=2, radius=law.radius)
+    spec = SynapseTableSpec(decomp=d, law=law)
+    total = 0
+    for ty in range(2):
+        for tx in range(2):
+            t = build_tables(spec, ty, tx, j_exc=0.4, j_inh=-1.6, seed=3)
+            total += t["stats"]["n_synapses"]
+            assert t["stats"]["clipped"] == 0
+    # every shard stores local synapses + remote-with-target-in-shard:
+    # totals should approximate sum over shards of expected_synapses
+    exp = 4 * spec.expected_synapses()
+    assert total == pytest.approx(exp, rel=0.15)
+
+
+def test_band_capacity_bounds_padding():
+    """Banded halo capacities keep padding bounded (Fig 3 flatness)."""
+    from repro.core.connectivity import exponential_law
+    law = exponential_law()
+    grid = ColumnGrid(48, 48, 124)
+    d = TileDecomposition(grid=grid, tiles_y=8, tiles_x=8, radius=law.radius)
+    spec = SynapseTableSpec(decomp=d, law=law)
+    bands = spec.halo_bands()
+    assert 1 < len(bands) <= 8
+    # capacities decrease geometrically from band to band
+    caps = [b["cap"] for b in bands]
+    assert all(c1 >= c2 for c1, c2 in zip(caps, caps[1:]))
+    # bytes/synapse must stay in a sane band (paper: flat ~30 B/syn)
+    bps = spec.table_bytes() / spec.expected_synapses()
+    assert bps < 40.0

@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED
+config of each family runs one forward/train step on CPU, asserting
+output shapes and no NaNs -- plus decode-consistency spot checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_reduced
+from repro.data.pipeline import LMBatchPipeline
+from repro.models.config import ShapeConfig
+from repro.models.model import (loss_fn, make_prefill, make_serve_step)
+from repro.models.transformer import (forward, init_decode_state,
+                                      init_model, logits as lm_logits)
+from repro.parallel.sharding import MeshRules
+
+RULES = MeshRules(batch=None, fsdp=None, heads=None, mlp=None,
+                  experts=None, vocab=None, kv_seq=None, d_inner=None)
+SMOKE_SHAPE = ShapeConfig("smoke", 64, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_train_step(arch):
+    """One loss+grad evaluation per reduced arch: shapes + finite."""
+    cfg = get_reduced(arch)
+    params, specs = init_model(jax.random.PRNGKey(0), cfg)
+    pipe = LMBatchPipeline(cfg=cfg, shape=SMOKE_SHAPE, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(lambda p, b: loss_fn(p, cfg, RULES, b),
+                           has_aux=True))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, arch
+    assert int(metrics["tokens"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_forward_shapes(arch):
+    cfg = get_reduced(arch)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    pipe = LMBatchPipeline(cfg=cfg, shape=SMOKE_SHAPE, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()
+             if k != "labels"}
+    x, _, _ = jax.jit(lambda p, b: forward(p, cfg, RULES, b))(params, batch)
+    n_text = batch["tokens"].shape[1]
+    assert x.shape == (2, n_text, cfg.d_model), arch
+    assert np.isfinite(np.asarray(x, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "falcon-mamba-7b",
+                                  "recurrentgemma-9b", "whisper-small",
+                                  "granite-moe-1b-a400m"])
+def test_arch_decode_matches_forward(arch):
+    """Prefill + single-token decode == full forward (per family)."""
+    cfg = get_reduced(arch)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    B, n = 2, 20
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, n)), jnp.int32)
+    batch = {"tokens": tokens}
+    from repro.models.frontends import STUB_WIDTH
+    if cfg.encoder_seq:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, STUB_WIDTH)),
+            jnp.dtype(cfg.dtype))
+    x, _, _ = forward(params, cfg, RULES, batch)
+    lg = lm_logits(params, x)
+
+    st = init_decode_state(cfg, B, n)
+    pre_batch = dict(batch, tokens=tokens[:, :n - 1])
+    lg_p, st = jax.jit(make_prefill(cfg, RULES))(params, pre_batch, st)
+    np.testing.assert_allclose(
+        np.asarray(lg_p[:, 0], np.float32),
+        np.asarray(lg[:, n - 2], np.float32), rtol=3e-2, atol=3e-2)
+    lg_d, st = jax.jit(make_serve_step(cfg, RULES))(
+        params, st, tokens[:, n - 1:], jnp.int32(n - 1))
+    np.testing.assert_allclose(
+        np.asarray(lg_d[:, 0], np.float32),
+        np.asarray(lg[:, n - 1], np.float32), rtol=3e-2, atol=3e-2)
+
+
+def test_full_configs_match_pool_specs():
+    """The FULL configs carry the exact pool numbers (never reduced)."""
+    spec = {
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "falcon-mamba-7b": (64, 4096, 1, 1, 0, 65024),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+    }
+    for arch, (L, d, h, kv, ff, v) in spec.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab_size) == (L, d, h, kv, ff, v), arch
+    assert get_config("granite-moe-1b-a400m").n_experts == 32
+    assert get_config("granite-moe-1b-a400m").moe_top_k == 8
+    assert get_config("kimi-k2-1t-a32b").n_experts == 384
+    assert get_config("falcon-mamba-7b").ssm_state == 16
+    assert get_config("recurrentgemma-9b").window == 2048
+
+
+def test_param_counts_sane():
+    assert get_config("kimi-k2-1t-a32b").param_count() > 1.0e12
+    assert 25e9 < get_config("kimi-k2-1t-a32b").active_param_count() < 35e9
+    assert 6.5e9 < get_config("falcon-mamba-7b").param_count() < 7.8e9
+    assert 8.5e9 < get_config("recurrentgemma-9b").param_count() < 10.5e9

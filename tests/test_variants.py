@@ -1,0 +1,53 @@
+"""Perf-variant correctness: the optimizations must be function-exact."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import apply_attention, init_attention
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import MeshRules
+
+RULES = MeshRules(batch=None, fsdp=None, heads=None, mlp=None,
+                  experts=None, vocab=None, kv_seq=None, d_inner=None)
+
+
+def test_head_padding_is_function_exact(rng):
+    """Pad 3 q-heads (2 kv) to 4/4: with zeroed extra out-proj rows and
+    zero-extended kv projections, outputs are bit-compatible."""
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=24,
+                      n_heads=3, n_kv_heads=3, d_ff=32, vocab_size=64,
+                      head_dim=8, dtype="float32",
+                      attn_chunk_q=16, attn_chunk_k=16)
+    cfg_pad = dataclasses.replace(cfg, n_heads=4, n_kv_heads=4)
+    p, _ = init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    # build padded params: extra slices zero
+    pp = {
+        "wq": jnp.zeros((24, 4, 8)).at[:, :3].set(p["wq"]),
+        "wk": jnp.zeros((24, 4, 8)).at[:, :3].set(p["wk"]),
+        "wv": jnp.zeros((24, 4, 8)).at[:, :3].set(p["wv"]),
+        "wo": jnp.zeros((4, 8, 24)).at[:3].set(p["wo"]),
+    }
+    x = jnp.asarray(rng.normal(size=(2, 20, 24)), jnp.float32)
+    pos = jnp.arange(20)
+    out, _ = apply_attention(p, cfg, RULES, x, pos, causal=True)
+    out_pad, _ = apply_attention(pp, cfg_pad, RULES, x, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_pad),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_variant_registry_applies():
+    from repro.launch.dryrun import VARIANTS, _apply_cfg_variant
+    from repro.configs import get_config
+    cfg = get_config("qwen2-1.5b")                 # 12 heads, kv 2
+    v = _apply_cfg_variant(cfg, VARIANTS["padded_heads"])
+    assert v.n_heads == 16 and v.n_kv_heads == 2   # 16 % 2 == 0, kv kept
+    assert v.resolved_head_dim == cfg.resolved_head_dim
+    w = _apply_cfg_variant(get_config("whisper-small"),
+                           VARIANTS["padded_heads"])
+    assert w.n_heads == 16 and w.n_kv_heads == 16  # MHA: pad kv too
+    k = _apply_cfg_variant(get_config("kimi-k2-1t-a32b"),
+                           VARIANTS["micro2"])
+    assert k.n_heads == 64                          # untouched
