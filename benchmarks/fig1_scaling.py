@@ -12,8 +12,6 @@ Two complementary reproductions:
     with the paper's 57-83% of ideal.
 """
 
-import numpy as np
-
 from repro.configs.snn import CASES
 from repro.core.metrics import strong_scaling_curve
 
@@ -83,7 +81,6 @@ def main():
         paper = PAPER_EFFICIENCY.get(name, "-")
         print(f"{name},{eff},{paper}")
     print("(model: analytic TPU-target roofline; paper: CPU cluster)")
-    import numpy as np
     for law in ("gaussian", "exponential"):
         c = [r["cost_per_event"] for r in out["weak_scaling"]
              if r["law"] == law]

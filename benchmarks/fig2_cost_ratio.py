@@ -4,6 +4,11 @@ Gaussian connectivity.  The paper measures 1.9-2.3x on its CPU cluster.
 We measure the same metric -- elapsed / (simulated_sec x total_syn x
 rate) -- on reduced grids (CPU container), in the event-driven mode
 whose work is proportional to synaptic events, exactly like DPSNN.
+
+Also emits ``BENCH_event_delivery.json``: a kernel-vs-XLA A/B of the
+event-delivery hot path (fused Pallas pipeline vs pure-XLA
+``deliver_events``) per connectivity law, so the perf trajectory of the
+kernel layer is machine-readable across PRs.
 """
 
 import time
@@ -13,17 +18,18 @@ import numpy as np
 
 from repro.core.connectivity import exponential_law, gaussian_law
 from repro.core.engine import (EngineConfig, build_shard_tables,
-                               firing_rate_hz, init_sim_state, run)
+                               init_sim_state, run)
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.metrics import cost_per_synaptic_event
 
 from .common import write_json
 
 
-def measure(law, grid=8, n_per_col=60, steps=400, reps=3) -> dict:
+def measure(law, grid=8, n_per_col=60, steps=400, reps=3,
+            use_kernels=False) -> dict:
     d = TileDecomposition(grid=ColumnGrid(grid, grid, n_per_col),
                           tiles_y=1, tiles_x=1, radius=law.radius)
-    cfg = EngineConfig(decomp=d, law=law)
+    cfg = EngineConfig(decomp=d, law=law, use_kernels=use_kernels)
     tabs = build_shard_tables(cfg)
     st = init_sim_state(cfg)
     fn = jax.jit(lambda s: run(s, tabs, cfg, steps))
@@ -73,8 +79,8 @@ from repro.core.connectivity import gaussian_law, exponential_law
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.engine import EngineConfig
 from repro.core.dist_engine import DistConfig, simulate
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.parallel.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 out = {{}}
 for name, law in (("gaussian", gaussian_law()),
                   ("exponential", exponential_law())):
@@ -119,6 +125,34 @@ def analytic_fullscale(shards=1024, grid=96) -> dict:
     return out
 
 
+def bench_event_delivery(grid=8, n_per_col=60, steps=300) -> dict:
+    """Kernel-vs-XLA A/B of the event-delivery hot path per law.
+
+    ``kernel`` routes LIF + delivery through the fused Pallas pipeline
+    (compiled on TPU, interpret-mode on CPU -- identical code path);
+    ``xla`` is the pure-XLA reference.  Written to
+    ``BENCH_event_delivery.json`` for cross-PR tracking.
+    """
+    out = {"backend": jax.default_backend(),
+           "interpret": jax.default_backend() != "tpu",
+           "grid": f"{grid}x{grid}x{n_per_col}", "steps": steps,
+           "laws": {}}
+    for name, law in (("gaussian", gaussian_law()),
+                      ("exponential", exponential_law())):
+        ab = {}
+        for col, uk in (("xla", False), ("kernel", "auto")):
+            m = measure(law, grid=grid, n_per_col=n_per_col, steps=steps,
+                        use_kernels=uk)
+            ab[col] = {k: m[k] for k in
+                       ("elapsed_s", "rate_hz", "recurrent_events",
+                        "cost_per_event")}
+        ab["kernel_vs_xla_wall_ratio"] = (
+            ab["kernel"]["elapsed_s"] / max(ab["xla"]["elapsed_s"], 1e-12))
+        out["laws"][name] = ab
+    write_json("BENCH_event_delivery.json", out)
+    return out
+
+
 def run_bench(grid=8, steps=400, with_distributed=True) -> dict:
     g = measure(gaussian_law(), grid=grid, steps=steps)
     e = measure(exponential_law(), grid=grid, steps=steps)
@@ -147,6 +181,7 @@ def run_bench(grid=8, steps=400, with_distributed=True) -> dict:
             out["cost_ratio_distributed"] = (
                 d["exponential"]["cost_per_event"]
                 / d["gaussian"]["cost_per_event"])
+    out["event_delivery_ab"] = bench_event_delivery(grid=grid)
     write_json("fig2.json", out)
     return out
 
@@ -163,6 +198,11 @@ def main():
     if "cost_ratio_distributed" in out:
         print(f"cost ratio exp/gauss (8-device halo): "
               f"{out['cost_ratio_distributed']:.2f}")
+    for name, ab in out["event_delivery_ab"]["laws"].items():
+        print(f"{name}: kernel/xla wall ratio "
+              f"{ab['kernel_vs_xla_wall_ratio']:.2f} "
+              f"(kernel {ab['kernel']['elapsed_s']:.3f}s, "
+              f"xla {ab['xla']['elapsed_s']:.3f}s)")
     print(f"cost ratio (analytic TPU @1024 shards): "
           f"{out['analytic_tpu_1024shards']['ratio']:.2f}")
     print(f"paper (CPU/MPI cluster): 1.9-2.3  -- see note in fig2.json")

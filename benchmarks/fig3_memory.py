@@ -10,7 +10,7 @@ reduced scale where tables actually materialize.
 import numpy as np
 
 from repro.configs.snn import CASES
-from repro.core.engine import EngineConfig, build_shard_tables
+from repro.core.engine import build_shard_tables
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.metrics import bytes_per_synapse
 from repro.core.synapses import SynapseTableSpec

@@ -10,7 +10,7 @@ import numpy as np
 from repro.configs import get_reduced
 from repro.data.pipeline import LMBatchPipeline
 from repro.models.config import ShapeConfig
-from repro.models.model import loss_fn, make_serve_step, make_train_step
+from repro.models.model import make_serve_step, make_train_step
 from repro.models.transformer import init_decode_state, init_model
 from repro.optim import adamw
 from repro.optim.schedules import constant
@@ -22,6 +22,34 @@ RULES = MeshRules(batch=None, fsdp=None, heads=None, mlp=None,
                   experts=None, vocab=None, kv_seq=None, d_inner=None)
 ARCHS = ["qwen2-1.5b", "falcon-mamba-7b", "recurrentgemma-9b",
          "granite-moe-1b-a400m", "whisper-small"]
+
+
+def bench_attention_ab(cfg, batch=2, seq=64, iters=3) -> dict:
+    """Kernel-vs-XLA A/B on this arch's attention shape: the Pallas
+    flash-attention kernel (compiled on TPU, interpret elsewhere) vs the
+    jnp reference.  Returns per-call medians in ms."""
+    from repro.kernels import ops as kops
+    h = cfg.n_heads or 4
+    kv = cfg.n_kv_heads or h
+    d = cfg.resolved_head_dim or 16
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((batch * h, seq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((batch * kv, seq, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((batch * kv, seq, d)), jnp.float32)
+    out = {}
+    for col, impl in (("kernel", "auto"), ("xla", "ref")):
+        f = jax.jit(lambda q, k, v, impl=impl: kops.attention(
+            q, k, v, causal=True, impl=impl, block_q=32, block_k=32))
+        jax.block_until_ready(f(q, k, v))
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(q, k, v))
+            ts.append(time.perf_counter() - t0)
+        out[f"attn_{col}_ms"] = round(float(np.median(ts)) * 1e3, 3)
+    out["attn_kernel_vs_xla"] = round(
+        out["attn_kernel_ms"] / max(out["attn_xla_ms"], 1e-9), 2)
+    return out
 
 
 def bench_arch(arch: str, batch=2, seq=64, iters=3) -> dict:
@@ -61,6 +89,7 @@ def bench_arch(arch: str, batch=2, seq=64, iters=3) -> dict:
         "train_tokens_per_s": round(batch * seq / train_s, 1),
         "decode_ms_per_token": round(decode_s * 1e3, 2),
         "loss": float(outm["loss"]),
+        **bench_attention_ab(cfg, batch=batch, seq=seq, iters=iters),
     }
 
 
@@ -76,6 +105,7 @@ def main():
         print(f"{r['arch']:24s} train {r['train_step_s']*1e3:8.1f} ms "
               f"({r['train_tokens_per_s']:8.1f} tok/s)  "
               f"decode {r['decode_ms_per_token']:6.2f} ms/tok  "
+              f"attn k/x {r['attn_kernel_vs_xla']:5.2f}  "
               f"loss {r['loss']:.3f}")
 
 

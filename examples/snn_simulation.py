@@ -10,7 +10,6 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 for a 4x2 tile grid).
 """
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -21,7 +20,6 @@ from repro.core.engine import (EngineConfig, build_shard_tables,
                                init_plasticity, init_sim_state,
                                run_plastic)
 from repro.core.grid import ColumnGrid, TileDecomposition
-from repro.core.metrics import cost_per_synaptic_event
 from repro.core.stdp import STDPParams
 from repro.launch.mesh import make_host_mesh
 

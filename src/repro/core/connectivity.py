@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
 
 import numpy as np
 

@@ -24,18 +24,17 @@ is local.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional, Sequence, Tuple, Union
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .engine import EngineConfig, external_drive, init_sim_state
+from .engine import (EngineConfig, deliver_event_tiers, external_drive,
+                     init_sim_state)
 from .halo import exchange_halo_2d, pack_bits, unpack_bits
 from .neuron import lif_sfa_step
-from .synapses import build_tables, deliver_events, deliver_gather_all
+from .synapses import build_tables, deliver_gather_all
 
 AxisName = Union[str, Tuple[str, ...]]
 
@@ -173,7 +172,7 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
         key, k_ext = jax.random.split(state["rng"])
         slot = state["t"] % e.d_ring
         i_now = state["i_ring"][slot] + external_drive(k_ext, n_local, e)
-        if e.use_kernels:
+        if e.kernels_enabled:
             from ..kernels import ops as kops
             neuron, spikes = kops.lif_step(state["neuron"], i_now, e.lif,
                                            state["active"])
@@ -196,21 +195,9 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
         # --- delivery --------------------------------------------------
         m = state["metrics"]
         if e.mode == "event":
-            if e.use_kernels:
-                from ..kernels import ops as kops
-                deliver = kops.synaptic_accum_events
-            else:
-                deliver = deliver_events
-            i_ring, ev, dr = deliver(
-                tables["local"], spikes, i_ring, slot, e.d_ring,
-                spec.active_cap_local)
-            ev, dr = ev.astype(jnp.float32), dr.astype(jnp.float32)
-            for band, tab, spk in zip(bands, tables["halo"], halo_spikes):
-                i_ring, ev_b, dr_b = deliver(
-                    tab, spk, i_ring, slot, e.d_ring,
-                    spec.active_cap_band(band))
-                ev += ev_b.astype(jnp.float32)
-                dr += dr_b.astype(jnp.float32)
+            i_ring, ev, dr = deliver_event_tiers(
+                tables, spikes, halo_spikes, spec, i_ring, slot,
+                e.d_ring, e.kernels_enabled)
         else:
             i_ring = deliver_gather_all(tables["local"], spikes, i_ring,
                                         slot, e.d_ring)
@@ -249,9 +236,10 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
         abstract_dist_inputs(cfg)[1])
     out_sp = (state_sp, cfg.pspec(1) if record_rate else None)
 
-    mapped = jax.shard_map(shard_body, mesh=mesh,
-                           in_specs=(state_sp, table_sp),
-                           out_specs=out_sp, check_vma=False)
+    from ..parallel.compat import shard_map
+    mapped = shard_map(shard_body, mesh=mesh,
+                       in_specs=(state_sp, table_sp),
+                       out_specs=out_sp)
     return jax.jit(mapped, donate_argnums=(0,))
 
 

@@ -18,8 +18,7 @@ State is a pytree; ``run`` is a ``lax.scan`` and jit-compatible.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -46,8 +45,24 @@ class EngineConfig:
     cap_headroom: float = 8.0        # event-list sizing (perf knob)
     seed: int = 0
     weight_dtype: str = "float32"
-    use_kernels: bool = False        # route LIF/accum through Pallas kernels
+    # Pallas kernel routing for LIF + event delivery:
+    #   "auto" (default) -- kernels everywhere: compiled on TPU,
+    #       interpret-mode on CPU/GPU so every environment exercises the
+    #       identical kernel code path;
+    #   True  -- same as "auto" (kept for older call sites);
+    #   False -- pure-XLA reference path (deliver_events / lif_sfa_step).
+    use_kernels: Union[bool, str] = "auto"
     stdp: object = None              # Optional[STDPParams]; plastic when set
+
+    @property
+    def kernels_enabled(self) -> bool:
+        if isinstance(self.use_kernels, str):
+            if self.use_kernels != "auto":
+                raise ValueError(
+                    f"use_kernels={self.use_kernels!r}: expected 'auto' "
+                    "or a bool")
+            return True
+        return bool(self.use_kernels)
 
     def spec(self) -> SynapseTableSpec:
         single = self.decomp.tiles_y == 1 and self.decomp.tiles_x == 1
@@ -96,6 +111,39 @@ def external_drive(rng_key, n_local: int, cfg: EngineConfig):
     return events.astype(jnp.float32) * cfg.lif.j_ext_mv
 
 
+def deliver_event_tiers(tables, spikes, halo_band_spikes, spec, i_ring,
+                        slot, d_ring: int, kernels_enabled: bool):
+    """Event-driven delivery of the local tier + every halo band.
+
+    The single source of truth for both step bodies (single-shard
+    ``step`` and the distributed ``shard_step``): tier sizing comes from
+    ``spec.delivery_plan()``, and the kernel path hands all tiers to one
+    fused ``synaptic_accum_banded`` launch while the XLA path loops
+    ``deliver_events`` per tier.  Returns (i_ring, events, dropped) as
+    f32 scalars.
+    """
+    plan = spec.delivery_plan()
+    halo = list(zip(plan[1:], tables["halo"], halo_band_spikes))
+    if kernels_enabled:
+        from ..kernels import ops as kops
+        tiers = [(tables["local"], spikes, plan[0]["active_cap"])]
+        tiers += [(tab, spk, p["active_cap"]) for p, tab, spk in halo]
+        i_ring, ev, dr = kops.synaptic_accum_banded(
+            tiers, i_ring, slot, d_ring)
+        return i_ring, ev.astype(jnp.float32), dr.astype(jnp.float32)
+    i_ring, ev, dr = deliver_events(
+        tables["local"], spikes, i_ring, slot, d_ring,
+        plan[0]["active_cap"])
+    ev = ev.astype(jnp.float32)
+    dr = dr.astype(jnp.float32)
+    for p, tab, spk in halo:
+        i_ring, ev_b, dr_b = deliver_events(
+            tab, spk, i_ring, slot, d_ring, p["active_cap"])
+        ev = ev + ev_b.astype(jnp.float32)
+        dr = dr + dr_b.astype(jnp.float32)
+    return i_ring, ev, dr
+
+
 def step(state: dict, tables: dict, cfg: EngineConfig,
          halo_band_spikes: Optional[list] = None):
     """One simulation step.
@@ -110,7 +158,7 @@ def step(state: dict, tables: dict, cfg: EngineConfig,
     slot = state["t"] % cfg.d_ring
 
     i_now = state["i_ring"][slot] + external_drive(k_ext, n_local, cfg)
-    if cfg.use_kernels:
+    if cfg.kernels_enabled:
         from ..kernels import ops as kops
         neuron, spikes = kops.lif_step(state["neuron"], i_now, cfg.lif,
                                        state["active"])
@@ -120,26 +168,12 @@ def step(state: dict, tables: dict, cfg: EngineConfig,
 
     i_ring = state["i_ring"].at[slot].set(0.0)
 
-    bands = spec.halo_bands()
     halo_band_spikes = halo_band_spikes or []
     metrics = state["metrics"]
     if cfg.mode == "event":
-        if cfg.use_kernels:
-            from ..kernels import ops as kops
-            deliver = kops.synaptic_accum_events
-        else:
-            deliver = deliver_events
-        i_ring, ev, dr = deliver(
-            tables["local"], spikes, i_ring, slot, cfg.d_ring,
-            spec.active_cap_local)
-        ev = ev.astype(jnp.float32)
-        dr = dr.astype(jnp.float32)
-        for band, tab, spk in zip(bands, tables["halo"], halo_band_spikes):
-            i_ring, ev_b, dr_b = deliver(
-                tab, spk, i_ring, slot, cfg.d_ring,
-                spec.active_cap_band(band))
-            ev = ev + ev_b.astype(jnp.float32)
-            dr = dr + dr_b.astype(jnp.float32)
+        i_ring, ev, dr = deliver_event_tiers(
+            tables, spikes, halo_band_spikes, spec, i_ring, slot,
+            cfg.d_ring, cfg.kernels_enabled)
         metrics = {
             "spikes": metrics["spikes"] + jnp.sum(spikes),
             "events": metrics["events"] + ev,

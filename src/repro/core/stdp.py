@@ -28,7 +28,6 @@ import dataclasses
 import math
 from typing import List, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 import jax
@@ -164,6 +164,27 @@ class SynapseTableSpec:
 
     def active_cap_band(self, band: dict) -> int:
         return self._active_cap(band["rows"])
+
+    # ---- kernel-facing delivery plan ------------------------------------
+    def band_caps(self) -> List[int]:
+        """Row capacity of each halo fan-out band (kernel block widths)."""
+        return [b["cap"] for b in self.halo_bands()]
+
+    def delivery_plan(self) -> List[dict]:
+        """Static per-tier sizing for the fused banded delivery kernel.
+
+        One entry per delivery tier, local first then each halo band:
+        ``{"cap": row_capacity, "active_cap": event-list size,
+        "rows": source rows}``.  Everything the kernel layer needs to
+        lay out its entry blocks is here -- tables supply only data.
+        """
+        plan = [{"cap": self.cap_local, "active_cap": self.active_cap_local,
+                 "rows": self.n_local}]
+        for b in self.halo_bands():
+            plan.append({"cap": b["cap"],
+                         "active_cap": self.active_cap_band(b),
+                         "rows": b["rows"]})
+        return plan
 
     # ---- index maps (static numpy constants) ---------------------------
     def local_positions_in_region(self) -> np.ndarray:

@@ -2,7 +2,12 @@
 oracle in ref.py and a jit'd wrapper in ops.py:
 
   * lif_step        -- fused memory-bound neuron update
-  * synaptic_accum  -- event gather -> VMEM scatter-add (the paper's hot loop)
+  * synaptic_accum  -- fused event-delivery pipeline (the paper's hot
+                       loop): spike compaction -> event gather -> blocked
+                       one-hot MXU scatter-add into the VMEM-resident
+                       delay ring; ``event_delivery_banded`` delivers the
+                       local tier plus every halo fan-out band in one
+                       launch
   * flash_attention -- blocked online-softmax attention (LM prefill)
 """
 

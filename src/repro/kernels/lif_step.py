@@ -50,6 +50,9 @@ def lif_step_pallas(v, c, refrac, i_total, active, *, leak_decay, sfa_decay,
                     interpret: bool = True):
     """Fused update on flat (n,) state arrays.  Returns (v, c, refrac, spk)."""
     n = v.shape[0]
+    # clamp the block to the problem: small nets (tests, reduced grids)
+    # must not pad up to a full 512x128 production block
+    block_rows = min(block_rows, max(-(-n // LANES), 8))
     blk = block_rows * LANES
     n_pad = -n % blk
 

@@ -10,15 +10,14 @@ for roofline accounting).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention as _flash
 from .lif_step import lif_step_pallas
-from .synaptic_accum import synaptic_accum_pallas
+from .synaptic_accum import (event_delivery, event_delivery_banded as
+                             _delivery_banded)
 
 
 def _interpret() -> bool:
@@ -54,18 +53,20 @@ def lif_step_ref(state: dict, i_total, params, active=None):
 
 def synaptic_accum_events(tables: dict, spikes_src, i_ring, t_slot,
                           d_ring: int, active_cap: int):
-    """Kernel-backed drop-in for ``core.synapses.deliver_events``."""
-    tgt, w, dslot, nnz = (tables["tgt"], tables["w"], tables["dslot"],
-                          tables["nnz"])
-    n_rows = tgt.shape[0] - 1
-    spk = spikes_src[:n_rows]
-    (idx,) = jnp.nonzero(spk > 0, size=active_cap, fill_value=n_rows)
-    i_ring = synaptic_accum_pallas(idx, t_slot, tgt, w, dslot, i_ring,
-                                   interpret=_interpret())
-    n_spikes = jnp.sum(spk > 0)
-    n_events = jnp.sum(nnz[idx])
-    n_dropped = jnp.maximum(n_spikes - active_cap, 0)
-    return i_ring, n_events, n_dropped
+    """Kernel-backed drop-in for ``core.synapses.deliver_events``.
+
+    Fused pipeline: compaction -> event gather -> blocked Pallas
+    scatter-add (see ``kernels.synaptic_accum``)."""
+    return event_delivery(tables, spikes_src, i_ring, t_slot, d_ring,
+                          active_cap, interpret=_interpret())
+
+
+def synaptic_accum_banded(tiers, i_ring, t_slot, d_ring: int):
+    """Fused multi-tier (local + halo-band) delivery in one kernel
+    launch per ring tile.  ``tiers``: [(tables, spikes, active_cap)].
+    Returns (ring, n_events, n_dropped) summed over tiers."""
+    return _delivery_banded(tiers, i_ring, t_slot, d_ring,
+                            interpret=_interpret())
 
 
 def attention(q, k, v, *, causal=True, window=None, scale=None, q_offset=0,

@@ -1,87 +1,277 @@
-"""Event-driven synaptic accumulation as a Pallas TPU kernel.
+"""Event-driven synaptic delivery as a fused Pallas TPU pipeline.
 
 This is DPSNN's hot loop: deliver every spike through its synapse-table
-row into the delayed-current ring.  The TPU shape of the problem:
+row into the delayed-current ring.  The per-step sequence
 
-  * the *event list* (compacted spiking-row indices) is tiny and known
-    before the grid runs -> **scalar prefetch**: the grid is one step per
-    event, and each step's input block is the event's table row, selected
-    by a dynamic ``index_map`` reading the prefetched index vector.  Rows
-    of non-events point at the all-zero sink row (last row), so padding
-    is harmless.
-  * the ring accumulator (D x n_local f32) fits VMEM for production tile
-    sizes (e.g. 6x6 columns x 1240 neurons x 8 slots ~ 1.4 MB), so the
-    scatter-add runs at VMEM latency, not HBM -- the key win over a
-    naive XLA scatter that round-trips HBM per event row.
-  * within a row the scatter is serialized (TPU has no vector scatter);
-    the sequential ``fori_loop`` over the row's ``cap`` entries is the
-    honest cost model -- one VMEM RMW per synaptic event, which is what
-    "cost per synaptic event" means on this hardware.
+    spike compaction -> event-index prefetch -> row gather -> ring
+    scatter-add
 
-The output block index_map is constant, so the accumulator block is
-*revisited* across grid steps; step 0 initializes it from the input ring.
+is fused into one kernel-layer entry point (``event_delivery`` /
+``event_delivery_banded``) so the engines never stitch the stages
+together themselves.  The TPU shape of the problem:
+
+  * **compaction** (``jnp.nonzero`` with a static ``active_cap``) puts
+    the spiking rows first and pads with the all-zero sink row, so the
+    valid synapse entries form a prefix of each tier's gathered event
+    list.  The per-block validity mask derived from the spike count is
+    scalar-prefetched, letting the kernel *skip* all-padding blocks with
+    ``pl.when`` -- runtime stays proportional to spikes x fan-out
+    (synaptic events, the paper's cost unit), not to the compaction
+    head-room.
+  * **gather** streams only the event rows' (tgt, w, dslot) triples out
+    of the synapse tables; the flattened entry list is what the kernel
+    consumes, so tiers with different row capacities (the geometric halo
+    fan-out bands) concatenate into ONE kernel launch per step instead
+    of one launch per band.
+  * **scatter-add** runs as a blocked one-hot matmul on the MXU:
+    ``contrib[d, n] = sum_e w[e] * [slot[e] == d] * [tgt[e] == n]``.
+    TPU has no vector scatter; a serialized per-entry RMW loop is
+    byte-accurate but leaves the MXU idle and is orders of magnitude
+    slower under ``interpret=True``.  The one-hot contraction is the
+    classic TPU scatter-as-matmul: (ENTRY_BLOCK, D) x (ENTRY_BLOCK, N)
+    one-hots contracted over the entry axis, accumulated into the
+    VMEM-resident ring block that is revisited across grid steps.
+  * the ring accumulator is tiled ``(D, TILE_N)`` so production tile
+    sizes (n_local ~ 45k) never exceed VMEM; each ring tile stays
+    resident while every entry block streams past it (targets are
+    shifted per tile, so out-of-tile entries match no one-hot column
+    and contribute nothing).
+
+Interpret mode (CPU) executes the identical BlockSpec tiling and kernel
+body with jnp ops, so tests exercise the same code path that compiles
+on TPU.
 """
 
 from __future__ import annotations
 
-import functools
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Sized so the per-block one-hot target matrix -- the largest kernel
+# intermediate, (ENTRY_BLOCK, TILE_N) f32 = 8 MiB -- plus its bool
+# precursor (2 MiB), the resident ring tile and the entry blocks stay
+# inside a ~16 MiB VMEM core.
+ENTRY_BLOCK = 1024        # synapse entries per grid step (sublane dim)
+TILE_N = 2048             # max ring-tile width (lane dim, multiple of 128)
+LANES = 128
 
 
-def _kernel(idx_ref, tslot_ref, tgt_ref, w_ref, d_ref, ring_ref, out_ref):
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _accum_kernel(meta_ref, blkmask_ref, tgt_ref, w_ref, d_ref,
+                  ring_ref, out_ref):
+    """One entry-block grid step of the fused scatter-add.
+
+    meta_ref:    scalar prefetch [t_slot]
+    blkmask_ref: scalar prefetch (n_entry_blocks,) -- 1 where the block
+                 overlaps valid (non-padding) entries
+    tgt/w/d:     (ENTRY_BLOCK, 1) flattened gathered synapse entries,
+                 targets already shifted into this ring tile's frame
+    ring/out:    (d_ring, tile_n) -- the revisited accumulator tile
+    """
     e = pl.program_id(0)
 
     @pl.when(e == 0)
     def _init():
         out_ref[...] = ring_ref[...]
 
-    d_ring = out_ref.shape[0]
-    cap = tgt_ref.shape[1]
-    t0 = tslot_ref[0]
+    @pl.when(blkmask_ref[e] > 0)
+    def _accum():
+        d_ring, tile_n = out_ref.shape
+        blk = tgt_ref.shape[0]
+        t0 = meta_ref[0]
+        slots = (t0 + d_ref[...]) % d_ring                    # (blk, 1)
+        oh_slot = slots == jax.lax.broadcasted_iota(
+            jnp.int32, (blk, d_ring), 1)
+        oh_tgt = tgt_ref[...] == jax.lax.broadcasted_iota(
+            jnp.int32, (blk, tile_n), 1)
+        wslot = jnp.where(oh_slot, w_ref[...].astype(jnp.float32), 0.0)
+        contrib = jax.lax.dot_general(
+            wslot, oh_tgt.astype(jnp.float32),
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        out_ref[...] += contrib
 
-    def body(k, _):
-        t = tgt_ref[0, k]
-        wv = w_ref[0, k].astype(jnp.float32)
-        slot = (t0 + d_ref[0, k].astype(jnp.int32)) % d_ring
-        cur = pl.load(out_ref, (pl.dslice(slot, 1), pl.dslice(t, 1)))
-        pl.store(out_ref, (pl.dslice(slot, 1), pl.dslice(t, 1)), cur + wv)
-        return 0
 
-    jax.lax.fori_loop(0, cap, body, 0)
+def _scatter_tile(meta, blk_mask, tgt_t, w_e, d_e, tile, *,
+                  interpret: bool):
+    """Run the entry-block grid against one resident ring tile."""
+    d_ring, tile_n = tile.shape
+    n_blocks = tgt_t.shape[0] // ENTRY_BLOCK
+    entry_spec = pl.BlockSpec((ENTRY_BLOCK, 1), lambda e, m, bm: (e, 0))
+    ring_spec = pl.BlockSpec((d_ring, tile_n), lambda e, m, bm: (0, 0))
+    gspec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2, grid=(n_blocks,),
+        in_specs=[entry_spec, entry_spec, entry_spec, ring_spec],
+        out_specs=ring_spec)
+    return pl.pallas_call(
+        _accum_kernel,
+        grid_spec=gspec,
+        out_shape=jax.ShapeDtypeStruct((d_ring, tile_n), jnp.float32),
+        interpret=interpret,
+    )(meta, blk_mask, tgt_t, w_e, d_e, tile)
 
+
+def _scatter_entries(tgt_e, w_e, d_e, blk_mask, ring, t_slot, *,
+                     interpret: bool):
+    """Blocked scatter of flat entry lists into the (tiled) ring.
+
+    tgt_e/w_e/d_e: (E, 1) with E a multiple of ENTRY_BLOCK; padding
+    entries must carry w == 0.  ``blk_mask``: (E // ENTRY_BLOCK,) int32.
+    """
+    d_ring, n_local = ring.shape
+    n_pad = _ceil_to(max(n_local, LANES), LANES)
+    tile_n = min(TILE_N, n_pad)
+    n_tiles = -(-n_pad // tile_n)
+    n_pad = n_tiles * tile_n
+    ring_p = jnp.pad(ring, ((0, 0), (0, n_pad - n_local)))
+    meta = jnp.asarray([t_slot], jnp.int32).reshape(1)
+    out = ring_p
+    for i in range(n_tiles):
+        tile = jax.lax.dynamic_slice(out, (0, i * tile_n),
+                                     (d_ring, tile_n))
+        new_tile = _scatter_tile(meta, blk_mask,
+                                 tgt_e - jnp.int32(i * tile_n),
+                                 w_e, d_e, tile, interpret=interpret)
+        out = jax.lax.dynamic_update_slice(out, new_tile, (0, i * tile_n))
+    return out[:, :n_local]
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: compaction
+# ---------------------------------------------------------------------------
+
+def compact_events(spikes_src, n_rows: int, active_cap: int):
+    """Spiking-row compaction: ascending row indices of the (at most
+    ``active_cap``) spiking sources, padded with the sink row ``n_rows``.
+
+    Returns (idx, n_spikes) -- ``idx`` is the event-index list; real
+    events occupy a prefix because ``nonzero`` is order-preserving.
+    """
+    spk = spikes_src[:n_rows]
+    (idx,) = jnp.nonzero(spk > 0, size=active_cap, fill_value=n_rows)
+    return idx.astype(jnp.int32), jnp.sum(spk > 0)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2+3: gather event rows and flatten to entry lists
+# ---------------------------------------------------------------------------
+
+def _gather_entries(tables: dict, idx):
+    """Gather event rows and flatten to (A * cap, 1) entry columns."""
+    rows_t = tables["tgt"][idx]
+    rows_w = tables["w"][idx].astype(jnp.float32)
+    rows_d = tables["dslot"][idx].astype(jnp.int32)
+
+    def flat(x):
+        return x.reshape(-1, 1)
+
+    return flat(rows_t.astype(jnp.int32)), flat(rows_w), flat(rows_d)
+
+
+# ---------------------------------------------------------------------------
+# Fused entry points
+# ---------------------------------------------------------------------------
+
+def event_delivery(tables: dict, spikes_src, i_ring, t_slot,
+                   d_ring: int, active_cap: int, *,
+                   interpret: bool = True):
+    """Fused single-tier delivery.  Drop-in for
+    ``core.synapses.deliver_events``: returns (ring, n_events, n_dropped).
+    """
+    return event_delivery_banded([(tables, spikes_src, active_cap)],
+                                 i_ring, t_slot, d_ring,
+                                 interpret=interpret)
+
+
+def event_delivery_banded(tiers: Sequence[Tuple[dict, jnp.ndarray, int]],
+                          i_ring, t_slot, d_ring: int, *,
+                          interpret: bool = True):
+    """Fused multi-tier delivery: ONE kernel launch (per ring tile) for
+    the local table plus every halo fan-out band.
+
+    ``tiers``: sequence of (tables, spikes_src, active_cap); each tier's
+    tables may have a different row capacity (the banded-halo layout) --
+    entry flattening makes the concatenation capacity-agnostic.
+    Returns (ring, n_events, n_dropped) summed over tiers.
+    """
+    assert i_ring.shape[0] == d_ring
+    parts_t: List[jnp.ndarray] = []
+    parts_w: List[jnp.ndarray] = []
+    parts_d: List[jnp.ndarray] = []
+    spans = []                 # (offset, cap, valid_rows) per tier
+    n_events = jnp.zeros((), jnp.int32)
+    n_dropped = jnp.zeros((), jnp.int32)
+    offset = 0
+    for tables, spikes_src, active_cap in tiers:
+        n_rows, cap = tables["tgt"].shape[0] - 1, tables["tgt"].shape[1]
+        idx, n_spk = compact_events(spikes_src, n_rows, active_cap)
+        te, we, de = _gather_entries(tables, idx)
+        parts_t.append(te)
+        parts_w.append(we)
+        parts_d.append(de)
+        valid_rows = jnp.minimum(n_spk.astype(jnp.int32),
+                                 jnp.int32(active_cap))
+        spans.append((offset, cap, valid_rows))
+        offset += te.shape[0]
+        n_events = n_events + jnp.sum(tables["nnz"][idx]).astype(jnp.int32)
+        n_dropped = n_dropped + jnp.maximum(
+            n_spk - active_cap, 0).astype(jnp.int32)
+
+    e_tot = _ceil_to(max(offset, ENTRY_BLOCK), ENTRY_BLOCK)
+    pad = e_tot - offset
+    tgt_e = jnp.concatenate(parts_t)
+    w_e = jnp.concatenate(parts_w)
+    d_e = jnp.concatenate(parts_d)
+    if pad:
+        tgt_e = jnp.pad(tgt_e, ((0, pad), (0, 0)))
+        w_e = jnp.pad(w_e, ((0, pad), (0, 0)))
+        d_e = jnp.pad(d_e, ((0, pad), (0, 0)))
+
+    # Valid-entry ranges: tier t occupies [off, off + valid_rows * cap).
+    # A block participates iff it overlaps any tier's range; all-padding
+    # blocks are skipped in-kernel (runtime ~ synaptic events).
+    n_blocks = e_tot // ENTRY_BLOCK
+    starts = jnp.arange(n_blocks, dtype=jnp.int32) * ENTRY_BLOCK
+    ends = starts + ENTRY_BLOCK
+    mask = jnp.zeros((n_blocks,), jnp.bool_)
+    for off, cap, valid_rows in spans:
+        hi = jnp.int32(off) + valid_rows * jnp.int32(cap)
+        mask = mask | ((starts < hi) & (ends > off))
+
+    ring = _scatter_entries(tgt_e, w_e, d_e, mask.astype(jnp.int32),
+                            i_ring, t_slot, interpret=interpret)
+    return ring, n_events, n_dropped
+
+
+# ---------------------------------------------------------------------------
+# Legacy single-call API (kept for the kernel sweep tests)
+# ---------------------------------------------------------------------------
 
 def synaptic_accum_pallas(idx, t_slot, tgt, w, dslot, ring, *,
                           interpret: bool = True):
     """Deliver event rows ``idx`` (A,) through the tables into ``ring``.
 
     Equivalent to ``ref.synaptic_accum_ref``.  ``dslot`` int8/int32;
-    ``ring`` (D, n_local) f32 -- returned updated.
+    ``ring`` (D, n_local) f32 -- returned updated.  Unlike
+    ``event_delivery`` this takes a pre-compacted index list and cannot
+    skip padding blocks (callers may pass arbitrary, unsorted indices).
     """
-    a = idx.shape[0]
-    rows, cap = tgt.shape
-    d_ringn, n_local = ring.shape
-    t_arr = jnp.asarray([t_slot], jnp.int32)
-    row_spec = pl.BlockSpec((1, cap), lambda e, idx_r, ts_r: (idx_r[e], 0))
-    ring_spec = pl.BlockSpec((d_ringn, n_local), lambda e, idx_r, ts_r: (0, 0))
-    grid_spec = pl.GridSpec(grid=(a,),
-                            in_specs=[row_spec, row_spec, row_spec,
-                                      ring_spec],
-                            out_specs=ring_spec)
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-        gspec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2, grid=(a,),
-            in_specs=[row_spec, row_spec, row_spec, ring_spec],
-            out_specs=ring_spec)
-    except Exception:  # pragma: no cover - older API fallback
-        gspec = grid_spec
-    out = pl.pallas_call(
-        _kernel,
-        grid_spec=gspec,
-        out_shape=jax.ShapeDtypeStruct((d_ringn, n_local), jnp.float32),
-        interpret=interpret,
-    )(idx.astype(jnp.int32), t_arr, tgt, w, dslot.astype(jnp.int32), ring)
-    return out
+    tables = {"tgt": tgt, "w": w, "dslot": dslot}
+    te, we, de = _gather_entries(tables, idx.astype(jnp.int32))
+    offset = te.shape[0]
+    e_tot = _ceil_to(max(offset, ENTRY_BLOCK), ENTRY_BLOCK)
+    pad = e_tot - offset
+    if pad:
+        te = jnp.pad(te, ((0, pad), (0, 0)))
+        we = jnp.pad(we, ((0, pad), (0, 0)))
+        de = jnp.pad(de, ((0, pad), (0, 0)))
+    mask = jnp.ones((e_tot // ENTRY_BLOCK,), jnp.int32)
+    return _scatter_entries(te, we, de, mask, ring, t_slot,
+                            interpret=interpret)

@@ -25,7 +25,6 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -188,7 +187,7 @@ def build_cell(arch: str, shape_name: str, mesh, variant: str = None):
 def build_snn_cell(case_name: str, mesh, variant: str = None):
     from repro.configs.snn import CASES
     from repro.core.dist_engine import (DistConfig, abstract_dist_inputs,
-                                        dist_shardings, make_sim_fn)
+                                        make_sim_fn)
     case = CASES[case_name]
     overrides = VARIANTS.get(variant, {}) if variant else {}
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))

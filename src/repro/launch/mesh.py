@@ -16,14 +16,14 @@ columns -- the pod axis adds more tile rows, like adding MPI ranks.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from ..parallel.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=None, axes=("data", "model")):
@@ -36,8 +36,7 @@ def make_host_mesh(shape=None, axes=("data", "model")):
         while n % m:
             m //= 2
         shape = (n // m, m)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_chips(mesh) -> int:

@@ -12,14 +12,9 @@ fault-tolerant runtime (checkpoints, retry, straggler watchdog).
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
-import os
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs import get_reduced
 from repro.data.pipeline import LMBatchPipeline

@@ -11,9 +11,6 @@ from __future__ import annotations
 
 import math
 
-import jax
-import jax.numpy as jnp
-
 from .config import ModelConfig
 from .layers import _normal, sinusoidal_positions
 

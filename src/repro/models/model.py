@@ -7,9 +7,7 @@ from ShapeDtypeStructs without allocating parameters.
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +15,7 @@ import jax.numpy as jnp
 from ..parallel.sharding import MeshRules, constrain
 from .config import ModelConfig, ShapeConfig
 from .transformer import (abstract_model, forward, init_decode_state,
-                          init_model, logits as lm_logits)
+                          logits as lm_logits)
 
 
 # ---------------------------------------------------------------------------
@@ -179,11 +177,12 @@ def make_compressed_pod_train_step(cfg: ModelConfig, rules: MeshRules,
             lambda x: P(*(("pod",) + (None,) * (x.ndim - 1))), batch)
         # prefix specs: P() = replicated across pods (manual axis only;
         # data/model sharding stays under automatic propagation)
-        return jax.shard_map(
+        from ..parallel.compat import shard_map
+        return shard_map(
             pod_body, mesh=mesh,
             in_specs=(P(), P(), P(), b_specs),
             out_specs=(P(), P(), P(), P()),
-            check_vma=False, axis_names={"pod"})(
+            axis_names={"pod"})(
             params, opt_state, residuals, batch)
 
     return step

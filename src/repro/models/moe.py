@@ -174,10 +174,11 @@ def _apply_moe_ep(p, cfg: ModelConfig, rules: MeshRules, x) -> Tuple:
         aux = jax.lax.psum(aux, all_axes) / n_shards
         return y.reshape(bl, sl, d), aux
 
-    y, aux = jax.shard_map(
+    from ..parallel.compat import shard_map
+    y, aux = shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, r_spec, w_in_spec, w_in_spec, w_out_spec),
-        out_specs=(x_spec, P()), check_vma=False)(
+        out_specs=(x_spec, P()))(
         x, p["router"], p["gate"], p["up"], p["down"])
     return y, {"load_balance": aux[0], "router_z": aux[1],
                "frac_dropped": aux[2]}

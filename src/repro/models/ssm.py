@@ -13,7 +13,7 @@ over channels so no collective is needed inside the scan.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

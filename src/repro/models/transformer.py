@@ -16,9 +16,8 @@ plus whisper's encoder stack and per-layer cross-attention.
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +28,7 @@ from .attention import (KVCache, abstract_cache, apply_attention,
 from .config import ModelConfig
 from .frontends import (apply_audio_frontend, apply_patch_frontend,
                         init_frontend)
-from .layers import (apply_embedding, apply_mlp, apply_rmsnorm, init_dense,
+from .layers import (apply_embedding, apply_mlp, apply_rmsnorm,
                      init_embedding, init_mlp, init_rmsnorm,
                      logits_from_embedding, sinusoidal_positions)
 from .moe import apply_moe, init_moe

@@ -9,7 +9,7 @@ config (full Adam moments would be 2 x 2 TB).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,96 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The real dependency is declared in ``pyproject.toml`` (CI installs it);
+this fallback keeps the suite runnable in hermetic environments where
+``pip install`` is unavailable.  It covers exactly the API surface the
+tests use -- ``@given`` + ``@settings`` with ``st.integers``,
+``st.floats`` and ``st.sampled_from`` -- by drawing a deterministic,
+seeded sample of examples instead of doing property search/shrinking.
+
+Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                      # hermetic env
+        from _hypothesis_fallback import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import zlib
+
+import numpy as np
+
+# Fewer examples than real hypothesis defaults: the fallback does no
+# shrinking, so extra draws buy little; keep tier-1 fast.
+MAX_EXAMPLES_CAP = int(os.environ.get("HYPOTHESIS_FALLBACK_EXAMPLES", "6"))
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mimics the ``hypothesis.strategies`` module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+
+def settings(max_examples=10, **_ignored):
+    """Records ``max_examples``; deadline/etc. are meaningless here."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies_args):
+    def deco(fn):
+        inner = fn
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # read from the wrapper: ``@settings`` may sit above or below
+            # ``@given`` (functools.wraps copies the attr up; a later
+            # ``settings`` application mutates the wrapper directly)
+            n = min(getattr(wrapper, "_fallback_max_examples", 10),
+                    MAX_EXAMPLES_CAP)
+            # Stable per-test seed so failures reproduce across runs.
+            seed = zlib.crc32(inner.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                drawn = tuple(s.example(rng) for s in strategies_args)
+                inner(*args, *drawn, **kwargs)
+
+        # ``settings`` may be applied above or below ``given``.
+        wrapper._fallback_max_examples = getattr(
+            inner, "_fallback_max_examples", 10)
+        # Hide the strategy-filled (rightmost) params from pytest's
+        # fixture resolution, like real hypothesis does.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        wrapper.__signature__ = sig.replace(
+            parameters=params[:len(params) - len(strategies_args)])
+        return wrapper
+
+    return deco

@@ -7,6 +7,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # registered here as well as pyproject.toml so direct pytest
+    # invocations from other rootdirs still know the marker
+    config.addinivalue_line(
+        "markers", "slow: multi-minute cases excluded from tier-1")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -8,7 +8,7 @@ import pytest
 from repro.kernels import ref as kref
 from repro.models.attention import chunked_attention
 from repro.models.config import ModelConfig
-from repro.models.moe import _apply_moe_dense, init_moe, moe_capacity
+from repro.models.moe import _apply_moe_dense, init_moe
 from repro.parallel.sharding import MeshRules
 
 RULES = MeshRules(batch=None, fsdp=None, heads=None, mlp=None,
@@ -27,9 +27,12 @@ def _ref(q, k, v, **kw):
 
 @pytest.mark.parametrize("sq,sk,h,kv,causal,win,cq,ck", [
     (37, 37, 4, 2, True, None, 16, 16),
-    (64, 64, 4, 1, True, 24, 16, 16),
-    (20, 50, 2, 2, False, None, 16, 16),
-    (50, 50, 2, 2, True, None, 50, 50),    # single chunk
+    pytest.param(64, 64, 4, 1, True, 24, 16, 16,
+                 marks=pytest.mark.slow),
+    pytest.param(20, 50, 2, 2, False, None, 16, 16,
+                 marks=pytest.mark.slow),
+    pytest.param(50, 50, 2, 2, True, None, 50, 50,    # single chunk
+                 marks=pytest.mark.slow),
 ])
 def test_chunked_attention_fwd_bwd(sq, sk, h, kv, causal, win, cq, ck, rng):
     d = 16
@@ -50,6 +53,7 @@ def test_chunked_attention_fwd_bwd(sq, sk, h, kv, causal, win, cq, ck, rng):
         np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
 
 
+@pytest.mark.slow
 def test_ring_cache_decode_matches_windowed_attention(rng):
     """long-context decode: the W-slot ring cache must reproduce full
     sliding-window attention exactly."""
@@ -79,6 +83,7 @@ def test_ring_cache_decode_matches_windowed_attention(rng):
                                    rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_moe_dense_capacity_accounting(rng):
     cfg = ModelConfig(name="m", family="moe", n_layers=1, d_model=16,
                       n_heads=1, n_kv_heads=1, d_ff=8, vocab_size=32,

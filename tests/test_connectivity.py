@@ -4,7 +4,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: see tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.connectivity import (ConnectivityLaw, exponential_law,
                                      gaussian_law, expected_synapse_counts,

@@ -1,14 +1,13 @@
 """Dry-run machinery units that don't need 512 devices."""
 
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCH_NAMES, all_cells, get_config, shape_cells
 from repro.models import model as M
 from repro.models.config import SHAPES
 from repro.perf.attention_credit import chunk_traffic_bytes
-from repro.perf.roofline import HW, model_flops
+from repro.perf.roofline import model_flops
 
 
 def test_cell_enumeration_matches_assignment():

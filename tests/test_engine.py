@@ -10,7 +10,7 @@ from repro.core.engine import (EngineConfig, build_shard_tables,
                                firing_rate_hz, init_plasticity,
                                init_sim_state, run, run_plastic)
 from repro.core.grid import ColumnGrid, TileDecomposition
-from repro.core.neuron import LIFParams, init_state, lif_sfa_step
+from repro.core.neuron import LIFParams, lif_sfa_step
 from repro.core.stdp import STDPParams
 
 
@@ -63,6 +63,7 @@ def test_event_mode_equals_gather_all_dynamics():
         float(s_g["metrics"]["events"])
 
 
+@pytest.mark.slow
 def test_rate_separation_exponential_vs_gaussian():
     """Paper section 2: identical parameters, only the connectivity law
     changes -> the exponential net fires at a higher rate (32-38 Hz vs

@@ -1,0 +1,156 @@
+"""The fused Pallas event-delivery pipeline is a drop-in for the XLA
+path: interpret-mode kernel vs ``deliver_events`` vs ``kernels.ref``
+across both connectivity laws and multiple halo fan-out bands."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.connectivity import exponential_law, gaussian_law
+from repro.core.engine import (EngineConfig, build_shard_tables,
+                               init_sim_state, run)
+from repro.core.grid import ColumnGrid, TileDecomposition
+from repro.core.synapses import SynapseTableSpec, build_tables, deliver_events
+from repro.kernels import ref
+from repro.kernels.synaptic_accum import (compact_events, event_delivery,
+                                          event_delivery_banded)
+
+
+def _dist_spec(law, grid=8, n_per_col=12, tiles=(4, 2)):
+    # n_per_col=12 keeps the kernel/XLA/ref triple comparison fast; the
+    # gaussian law needs 20 for the fan-out map to split into >= 2 bands.
+    # rate_cap_hz=25 shrinks the compaction head-room (and with it the
+    # interpret-mode trace cost) while staying far above the ~8% spike
+    # rates these tests drive.
+    d = TileDecomposition(grid=ColumnGrid(grid, grid, n_per_col),
+                          tiles_y=tiles[0], tiles_x=tiles[1],
+                          radius=law.radius)
+    return SynapseTableSpec(decomp=d, law=law, rate_cap_hz=25.0)
+
+
+def _band_spikes(spec, rng, rate=0.05):
+    return [jnp.asarray((rng.random(b["rows"]) < rate).astype(np.float32))
+            for b in spec.halo_bands()]
+
+
+@pytest.mark.parametrize("law_name", ["gaussian", "exponential"])
+def test_banded_delivery_matches_xla_and_ref(law_name, rng):
+    """Local tier + every halo band, one fused kernel launch vs the
+    per-tier XLA loop vs the pure-jnp oracle."""
+    law = gaussian_law() if law_name == "gaussian" else exponential_law()
+    spec = _dist_spec(law, n_per_col=20 if law_name == "gaussian" else 12)
+    bands = spec.halo_bands()
+    assert len(bands) >= 2, "need at least two halo fan-out bands"
+
+    tabs = build_tables(spec, 1, 1, j_exc=0.4, j_inh=-2.0, seed=3)
+    spikes_local = jnp.asarray(
+        (rng.random(spec.n_local) < 0.08).astype(np.float32))
+    spikes_bands = _band_spikes(spec, rng)
+    ring0 = jnp.asarray(rng.normal(size=(spec.d_ring, spec.n_local)),
+                        jnp.float32)
+    t_slot = 5
+
+    tiers = [(tabs["local"], spikes_local, spec.active_cap_local)]
+    tiers += [(tab, spk, spec.active_cap_band(b))
+              for b, tab, spk in zip(bands, tabs["halo"], spikes_bands)]
+
+    # fused Pallas (interpret on CPU)
+    ring_k, ev_k, dr_k = jax.jit(
+        lambda r: event_delivery_banded(tiers, r, t_slot, spec.d_ring,
+                                        interpret=True))(ring0)
+
+    # XLA per-tier loop
+    ring_x = ring0
+    ev_x = jnp.zeros((), jnp.int32)
+    for tab, spk, cap in tiers:
+        ring_x, ev, dr = deliver_events(tab, spk, ring_x, t_slot,
+                                        spec.d_ring, cap)
+        ev_x = ev_x + ev.astype(jnp.int32)
+
+    # pure-jnp oracle, tier by tier
+    ring_r = ring0
+    for tab, spk, cap in tiers:
+        n_rows = tab["tgt"].shape[0] - 1
+        idx, _ = compact_events(spk, n_rows, cap)
+        ring_r = ref.synaptic_accum_ref(idx, t_slot, tab["tgt"], tab["w"],
+                                        tab["dslot"], ring_r)
+
+    np.testing.assert_allclose(np.asarray(ring_k), np.asarray(ring_x),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ring_k), np.asarray(ring_r),
+                               rtol=1e-5, atol=1e-5)
+    assert int(ev_k) == int(ev_x)
+    assert int(dr_k) == 0
+
+
+@pytest.mark.parametrize("law_name", ["gaussian", "exponential"])
+def test_zero_spike_delivery_is_identity(law_name, rng):
+    """All-padding event lists (no spikes anywhere) leave the ring
+    bit-identical: every entry block is skipped."""
+    law = gaussian_law() if law_name == "gaussian" else exponential_law()
+    spec = _dist_spec(law)
+    tabs = build_tables(spec, 0, 0, j_exc=0.4, j_inh=-2.0, seed=1)
+    ring0 = jnp.asarray(rng.normal(size=(spec.d_ring, spec.n_local)),
+                        jnp.float32)
+    tiers = [(tabs["local"], jnp.zeros(spec.n_local), spec.active_cap_local)]
+    tiers += [(tab, jnp.zeros(b["rows"]), spec.active_cap_band(b))
+              for b, tab in zip(spec.halo_bands(), tabs["halo"])]
+    ring_k, ev, dr = jax.jit(
+        lambda r: event_delivery_banded(tiers, r, 2, spec.d_ring,
+                                        interpret=True))(ring0)
+    np.testing.assert_array_equal(np.asarray(ring_k), np.asarray(ring0))
+    assert int(ev) == 0 and int(dr) == 0
+
+
+def test_single_tier_fused_equals_deliver_events(rng):
+    """ops.synaptic_accum_events (the fused single-tier wrapper) is a
+    drop-in for core.synapses.deliver_events."""
+    law = gaussian_law()
+    d = TileDecomposition(grid=ColumnGrid(4, 4, 30), tiles_y=1, tiles_x=1,
+                          radius=law.radius)
+    spec = SynapseTableSpec(decomp=d, law=law, single_shard=True)
+    tabs = build_tables(spec, 0, 0, j_exc=0.4, j_inh=-2.0, seed=2)
+    spikes = jnp.asarray((rng.random(spec.n_local) < 0.1).astype(np.float32))
+    ring0 = jnp.zeros((spec.d_ring, spec.n_local), jnp.float32)
+    r1, e1, d1 = jax.jit(
+        lambda r: event_delivery(tabs["local"], spikes, r, 1,
+                                 spec.d_ring, spec.active_cap_local,
+                                 interpret=True))(ring0)
+    r2, e2, d2 = deliver_events(tabs["local"], spikes, ring0, 1,
+                                spec.d_ring, spec.active_cap_local)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2),
+                               rtol=1e-5, atol=1e-5)
+    assert int(e1) == int(e2) and int(d1) == int(d2)
+
+
+def test_engine_auto_kernels_matches_xla_engine():
+    """use_kernels="auto" on CPU (interpret-mode Pallas) reproduces the
+    pure-XLA engine's spike trains exactly."""
+    law = gaussian_law()
+    d = TileDecomposition(grid=ColumnGrid(3, 3, 30), tiles_y=1, tiles_x=1,
+                          radius=law.radius)
+    cfg = EngineConfig(decomp=d, law=law, use_kernels="auto")
+    cfg_x = dataclasses.replace(cfg, use_kernels=False)
+    tabs = build_shard_tables(cfg)
+    _, sp_k = jax.jit(lambda s: run(s, tabs, cfg, 60))(init_sim_state(cfg))
+    _, sp_x = jax.jit(lambda s: run(s, tabs, cfg_x, 60))(
+        init_sim_state(cfg_x))
+    np.testing.assert_array_equal(np.asarray(sp_k), np.asarray(sp_x))
+
+
+def test_delivery_plan_shapes():
+    """The spec's kernel-facing plan matches the materialized tables."""
+    law = exponential_law()
+    spec = _dist_spec(law)
+    plan = spec.delivery_plan()
+    tabs = build_tables(spec, 1, 1, j_exc=0.4, j_inh=-2.0, seed=0)
+    tiers = [tabs["local"]] + list(tabs["halo"])
+    assert len(plan) == len(tiers)
+    assert plan[0]["rows"] == spec.n_local
+    assert spec.band_caps() == [p["cap"] for p in plan[1:]]
+    for p, tab in zip(plan, tiers):
+        assert tab["tgt"].shape == (p["rows"] + 1, p["cap"])
+        assert p["active_cap"] <= p["rows"] + 1

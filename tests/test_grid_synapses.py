@@ -2,11 +2,14 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: see tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
 
 import jax.numpy as jnp
 
-from repro.core.connectivity import ConnectivityLaw, gaussian_law
+from repro.core.connectivity import gaussian_law
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.synapses import (SynapseTableSpec, _pack_rows, build_tables,
                                  deliver_events, deliver_gather_all)

@@ -1,10 +1,12 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: see tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.neuron import LIFParams
 from repro.kernels import ops, ref

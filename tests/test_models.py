@@ -19,8 +19,17 @@ RULES = MeshRules(batch=None, fsdp=None, heads=None, mlp=None,
                   experts=None, vocab=None, kv_seq=None, d_inner=None)
 SMOKE_SHAPE = ShapeConfig("smoke", 64, 2, "train")
 
+# tier-1 keeps one representative per family axis (dense / MoE / small);
+# the rest of the sweep is multi-minute on CPU and runs under -m slow
+FAST_ARCHS = {"gemma-2b", "granite-moe-1b-a400m"}
 
-@pytest.mark.parametrize("arch", ARCH_NAMES)
+
+def _arch_params(names):
+    return [a if a in FAST_ARCHS
+            else pytest.param(a, marks=pytest.mark.slow) for a in names]
+
+
+@pytest.mark.parametrize("arch", _arch_params(ARCH_NAMES))
 def test_arch_smoke_train_step(arch):
     """One loss+grad evaluation per reduced arch: shapes + finite."""
     cfg = get_reduced(arch)
@@ -36,7 +45,7 @@ def test_arch_smoke_train_step(arch):
     assert int(metrics["tokens"]) > 0
 
 
-@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("arch", _arch_params(ARCH_NAMES))
 def test_arch_smoke_forward_shapes(arch):
     cfg = get_reduced(arch)
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
@@ -49,9 +58,9 @@ def test_arch_smoke_forward_shapes(arch):
     assert np.isfinite(np.asarray(x, np.float32)).all(), arch
 
 
-@pytest.mark.parametrize("arch", ["qwen3-8b", "falcon-mamba-7b",
-                                  "recurrentgemma-9b", "whisper-small",
-                                  "granite-moe-1b-a400m"])
+@pytest.mark.parametrize("arch", _arch_params(
+    ["qwen3-8b", "falcon-mamba-7b", "recurrentgemma-9b", "whisper-small",
+     "granite-moe-1b-a400m"]))
 def test_arch_decode_matches_forward(arch):
     """Prefill + single-token decode == full forward (per family)."""
     cfg = get_reduced(arch)

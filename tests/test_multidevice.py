@@ -6,9 +6,13 @@ import os
 import subprocess
 import sys
 
+import jax
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# every case spawns an 8-device subprocess simulation; minutes on CPU
+pytestmark = pytest.mark.slow
 
 
 def run_py(code: str, devices: int = 8, timeout: int = 900):
@@ -24,8 +28,8 @@ def run_py(code: str, devices: int = 8, timeout: int = 900):
 PRELUDE = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+from repro.parallel.compat import make_mesh, shard_map
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 """
 
 
@@ -44,9 +48,9 @@ def body(x):
     regp = unpack_bits(exchange_halo_2d(pack_bits(x), radius=R,
         axis_y=("pod", "data"), axis_x="model"), F)
     return reg[None, None], regp[None, None]
-sm = jax.jit(jax.shard_map(body, mesh=mesh,
+sm = jax.jit(shard_map(body, mesh=mesh,
     in_specs=(P(("pod", "data"), "model"),),
-    out_specs=(P(("pod", "data"), "model"),)*2, check_vma=False))
+    out_specs=(P(("pod", "data"), "model"),)*2))
 reg, regp = sm(jnp.asarray(tiles))
 pad = np.pad(glob, ((R, R), (R, R), (0, 0)))
 for ty in range(TY):
@@ -108,8 +112,8 @@ assert r8 == __import__("pytest").approx(r1, rel=0.35)
 def test_moe_ep_equals_dense():
     run_py("""
 import jax, jax.numpy as jnp, numpy as np
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.parallel.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 from repro.models import ModelConfig
 from repro.models.moe import init_moe, _apply_moe_dense, _apply_moe_ep
 from repro.parallel.sharding import MeshRules, rules_for_mesh
@@ -141,8 +145,8 @@ def test_sharded_train_step_matches_single_device():
     """The same train step, 1 device vs 4x2 mesh: identical loss."""
     run_py("""
 import jax, jax.numpy as jnp, numpy as np
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.parallel.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 from repro.models import ModelConfig
 from repro.models.transformer import init_model
 from repro.models.model import loss_fn
@@ -172,10 +176,9 @@ def test_elastic_restore_onto_different_mesh(tmp_path):
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint.store import save_checkpoint, restore_checkpoint
-m1 = jax.make_mesh((4, 2), ("data", "model"),
-                   axis_types=(jax.sharding.AxisType.Auto,)*2)
-m2 = jax.make_mesh((2, 4), ("data", "model"),
-                   axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.parallel.compat import make_mesh
+m1 = make_mesh((4, 2), ("data", "model"))
+m2 = make_mesh((2, 4), ("data", "model"))
 x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
 x1 = jax.device_put(x, NamedSharding(m1, P("data", "model")))
 save_checkpoint({str(tmp_path)!r}, 3, {{"w": x1}})
@@ -187,13 +190,17 @@ print("elastic OK")
 """)
 
 
+@pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="partial-manual shard_map (auto=) hits an XLA CHECK failure "
+           "on the 0.4.x line")
 def test_compressed_pod_gradient_sync():
     """int8+error-feedback cross-pod DP: first step matches the exact
     step to int8 precision and training still converges."""
     run_py("""
 import jax, jax.numpy as jnp, numpy as np
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+from repro.parallel.compat import make_mesh
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 from repro.models import ModelConfig
 from repro.models.transformer import init_model
 from repro.models.model import make_train_step, make_compressed_pod_train_step

@@ -1,7 +1,5 @@
 """Fault-tolerant driver: restart-on-failure, stragglers, preemption."""
 
-import time
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
