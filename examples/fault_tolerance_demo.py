@@ -30,12 +30,13 @@ def main():
           f"checkpoint (step 30 // 10 * 10 = 30) and replayed")
     print(f"completed {out['final_step']} steps; "
           f"loss {losses[0]:.3f} -> {losses[max(losses)]:.3f}")
-    # step 35 was computed twice (before+after crash): deterministic
-    replay = [m for m in out["metrics"] if m["step"] == 35]
-    if len(replay) == 2:
-        assert abs(replay[0]["loss"] - replay[1]["loss"]) < 1e-5
-        print(f"replayed step 35 reproduced exactly: "
-              f"{replay[0]['loss']:.6f} == {replay[1]['loss']:.6f}")
+    # steps 30-34 were computed twice (before+after crash), but the
+    # abandoned timeline is pruned: the log carries each step once
+    steps = [m["step"] for m in out["metrics"]]
+    assert steps == sorted(set(steps)), "replayed steps must appear once"
+    assert len(losses) == 50
+    print(f"metrics log carries each of the {len(steps)} steps exactly "
+          "once despite the crash-and-replay")
     print("ok")
 
 

@@ -1,4 +1,4 @@
 """Fault-tolerant checkpointing: atomic, hashed, keep-k, async, elastic."""
 
 from .store import (save_checkpoint, restore_checkpoint, latest_step,
-                    AsyncCheckpointer)
+                    checkpoint_meta, AsyncCheckpointer)

@@ -38,7 +38,11 @@ def _tree_paths(tree):
     return flat, treedef
 
 
-def save_checkpoint(directory: str, step: int, tree, keep: int = 3) -> str:
+def save_checkpoint(directory: str, step: int, tree, keep: int = 3,
+                    meta: Optional[dict] = None) -> str:
+    """``meta``: optional JSON-serializable dict stored inside the
+    step's manifest -- atomic with the checkpoint itself (a sidecar
+    file could describe a checkpoint that never got published)."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + f".tmp-{os.getpid()}"
@@ -46,7 +50,8 @@ def save_checkpoint(directory: str, step: int, tree, keep: int = 3) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     flat, treedef = _tree_paths(tree)
-    manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+    manifest = {"step": step, "treedef": str(treedef),
+                "meta": meta or {}, "leaves": []}
     for i, leaf in enumerate(flat):
         arr = np.asarray(jax.device_get(leaf))
         fn = f"leaf_{i:05d}.npy"
@@ -81,6 +86,14 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def checkpoint_meta(directory: str, step: int) -> dict:
+    """The ``meta`` dict stored with ``save_checkpoint`` (empty for
+    checkpoints written without one)."""
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f).get("meta", {})
+
+
 def restore_checkpoint(directory: str, step: int, like,
                        shardings=None, verify: bool = True):
     """Restore into the structure of ``like`` (a pytree of arrays or
@@ -106,6 +119,12 @@ def restore_checkpoint(directory: str, step: int, like,
         if tuple(arr.shape) != tuple(want.shape):
             raise ValueError(f"{meta['file']}: shape {arr.shape} != "
                              f"expected {want.shape}")
+        want_dtype = np.dtype(want.dtype)
+        if arr.dtype != want_dtype:
+            raise ValueError(
+                f"{meta['file']}: dtype {arr.dtype} != expected "
+                f"{want_dtype} -- a drifted dtype would silently "
+                "recompile or corrupt the jitted step")
         leaves.append(arr)
     tree = jax.tree.unflatten(treedef, leaves)
     if shardings is not None:
@@ -130,20 +149,21 @@ class AsyncCheckpointer:
             item = self._q.get()
             if item is None:
                 return
-            step, tree = item
+            step, tree, meta = item
             try:
-                save_checkpoint(self.directory, step, tree, self.keep)
+                save_checkpoint(self.directory, step, tree, self.keep,
+                                meta=meta)
             except BaseException as e:   # surfaced on next save/wait
                 self._err = e
             finally:
                 self._q.task_done()
 
-    def save(self, step: int, tree):
+    def save(self, step: int, tree, meta: Optional[dict] = None):
         if self._err:
             raise self._err
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                  tree)
-        self._q.put((step, host_tree))
+        self._q.put((step, host_tree, meta))
 
     def wait(self):
         self._q.join()

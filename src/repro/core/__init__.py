@@ -11,5 +11,6 @@ from .synapses import SynapseTableSpec, build_tables
 from .engine import (EngineConfig, init_sim_state, build_shard_tables, run,
                      run_plastic, init_plasticity, firing_rate_hz)
 from .dist_engine import DistConfig, make_sim_fn, simulate
+from .retile import retile_config, retile_state
 from .stdp import STDPParams
 from . import metrics

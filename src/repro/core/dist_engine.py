@@ -158,6 +158,14 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
     The whole ``n_steps`` scan runs inside one ``shard_map`` call so the
     halo exchanges appear as ``collective-permute`` ops inside the scan
     body -- one lowered program, n_steps iterations, no per-step dispatch.
+
+    The state argument is **donated**: callers must rebind to the
+    returned state and drop every other reference.  For arbitrarily long
+    runs, build once with ``n_steps = segment_steps`` and call
+    repeatedly -- the state carries ``t``, so each call continues
+    seamlessly where the last segment stopped (this is the segmented
+    pattern ``runtime.sim_driver.SimDriver`` drives, with checkpoints
+    between segments).
     """
     e = cfg.engine
     spec = e.spec()
@@ -258,7 +266,9 @@ def simulate(cfg: DistConfig, mesh: Mesh, n_steps: int, timed: bool = False):
     tables = jax.device_put(tables, sharding_tables)
     sim = make_sim_fn(cfg, mesh, n_steps)
     elapsed = None
-    state0 = state
+    # ``sim`` donates its state argument (donate_argnums=(0,)): always
+    # rebind to the returned state and keep no other reference, or a
+    # later read would touch a donated buffer.
     state, per_step = sim(state, tables)
     if timed:
         jax.block_until_ready(per_step)
@@ -267,7 +277,6 @@ def simulate(cfg: DistConfig, mesh: Mesh, n_steps: int, timed: bool = False):
         state, per_step = sim(state, tables)
         jax.block_until_ready(per_step)
         elapsed = time.perf_counter() - t0
-        n_steps_counted = n_steps
     n_active = float(jnp.sum(state["active"]))
     spikes = float(jnp.sum(state["metrics"]["spikes"]))
     total_steps = n_steps * (2 if timed else 1)

@@ -253,9 +253,18 @@ def init_plasticity(tables: dict, cfg: EngineConfig) -> dict:
     }
 
 
-def firing_rate_hz(state: dict, cfg: EngineConfig, n_steps: int) -> float:
-    """Mean firing rate over the simulated window (active neurons only)."""
+def firing_rate_hz(state: dict, cfg: EngineConfig,
+                   n_steps: Optional[int] = None) -> float:
+    """Mean firing rate over the simulated window (active neurons only).
+
+    ``n_steps=None`` derives the window from the state's own step
+    counter ``t`` -- the right choice for resumed/segmented runs, and
+    also correct for stacked ``(TY, TX, ...)`` distributed state (the
+    metrics are per-tile partial sums; ``jnp.sum`` totals them).
+    """
+    if n_steps is None:
+        n_steps = int(np.asarray(jnp.max(state["t"])))
     n_active = float(np.asarray(jnp.sum(state["active"])))
-    spikes = float(np.asarray(state["metrics"]["spikes"]))
+    spikes = float(np.asarray(jnp.sum(state["metrics"]["spikes"])))
     sim_sec = n_steps * cfg.lif.dt_ms * 1e-3
     return spikes / max(n_active, 1.0) / max(sim_sec, 1e-9)

@@ -1,0 +1,147 @@
+"""Elastic re-tiling of checkpointed distributed SNN state.
+
+A DPSNN-style job checkpointed on a ``tiles_y x tiles_x`` decomposition
+must be able to come back on a *different* one (the MPI analogue:
+resubmitting the same slab on a different process geometry).  The global
+model is tiling-invariant -- a neuron is identified by its **global
+column id** ``gy * W + gx`` plus its within-column index -- so restore
+is a pure relayout:
+
+  * ``v``, ``c``, ``refrac``, ``active``: permuted per neuron by global
+    column id (padded slots of the new tiling get inert fill values);
+  * ``i_ring``: the delay ring is *target*-indexed, so every in-flight
+    delayed current moves with its target column; the slot axis is kept
+    as-is and ``t`` is preserved, so the ``t % d_ring`` alignment
+    survives the move exactly;
+  * ``t``: broadcast unchanged to the new tile array;
+  * ``metrics``: per-tile partial sums whose only invariant is the
+    global total -- the total lands on tile (0, 0), zeros elsewhere;
+  * ``rng``: per-tile streams are re-derived (``fold_in`` of the old
+    (0, 0) key by new tile index) -- the resumed dynamics are a valid
+    continuation, not a bitwise replay of the old tiling's stream.
+
+Synapse tables are **not** relaid out: they are rebuilt
+deterministically for the new decomposition from the same engine seed
+(``build_dist_tables``), exactly like DPSNN re-deriving its connectivity
+from the configuration on restart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .grid import TileDecomposition
+
+
+def global_column_ids(d: TileDecomposition) -> np.ndarray:
+    """(tiles_y, tiles_x, tile_cols) global column id; -1 for padded
+    columns that lie outside the logical grid."""
+    H, W = d.grid.height, d.grid.width
+    out = np.full((d.tiles_y, d.tiles_x, d.tile_cols), -1, np.int64)
+    for ty in range(d.tiles_y):
+        for tx in range(d.tiles_x):
+            oy, ox = d.tile_origin(ty, tx)
+            ys = oy + np.arange(d.tile_h)[:, None]
+            xs = ox + np.arange(d.tile_w)[None, :]
+            gid = np.where((ys < H) & (xs < W), ys * W + xs, -1)
+            out[ty, tx] = gid.ravel()
+    return out
+
+
+def neuron_gather_map(old: TileDecomposition,
+                      new: TileDecomposition) -> np.ndarray:
+    """Per-neuron relayout map between two tilings of the same grid.
+
+    Returns ``src`` of shape ``(new.tiles_y, new.tiles_x, new.n_local)``:
+    for each neuron slot of the new layout, the flat index of the same
+    global neuron in the old layout flattened to
+    ``(old.tiles_y * old.tiles_x * old.n_local,)``, or -1 for slots in
+    padded columns (no logical neuron lives there).
+    """
+    if old.grid != new.grid:
+        raise ValueError(f"grid mismatch: {old.grid} != {new.grid}")
+    n_per = old.grid.n_per_column
+    # flat old column position of each global column id
+    gid_old = global_column_ids(old).reshape(-1)
+    src_col = np.full(old.grid.n_columns, -1, np.int64)
+    pos = np.where(gid_old >= 0)[0]
+    src_col[gid_old[pos]] = pos
+    # new slot -> old flat column -> old flat neuron
+    gid_new = global_column_ids(new)
+    col_src = np.where(gid_new >= 0, src_col[np.maximum(gid_new, 0)], -1)
+    src = col_src[..., None] * n_per + np.arange(n_per)
+    src = np.where(col_src[..., None] >= 0, src, -1)
+    return src.reshape(new.tiles_y, new.tiles_x, new.n_local)
+
+
+def retile_config(cfg, tiles_y: int, tiles_x: int):
+    """A DistConfig identical to ``cfg`` but on a different tiling."""
+    decomp = dataclasses.replace(cfg.engine.decomp, tiles_y=tiles_y,
+                                 tiles_x=tiles_x)
+    return dataclasses.replace(
+        cfg, engine=dataclasses.replace(cfg.engine, decomp=decomp))
+
+
+def retile_state(state: dict, old: TileDecomposition,
+                 new: TileDecomposition) -> dict:
+    """Relayout a (host-side) distributed sim state onto a new tiling.
+
+    ``state`` is the pytree produced by ``init_dist_state`` /
+    ``restore_checkpoint`` with every leaf carrying leading
+    ``(old.tiles_y, old.tiles_x)`` tile dims.  Returns the same pytree
+    shaped for ``new``.  Pure host-side numpy; callers ``device_put``
+    the result with the new mesh's shardings.
+    """
+    src = neuron_gather_map(old, new)          # (TY2, TX2, n_local2)
+    valid = src >= 0
+    idx = np.maximum(src, 0)
+    ty2, tx2 = new.tiles_y, new.tiles_x
+
+    def permute(leaf, fill):
+        flat = np.asarray(leaf).reshape(-1)
+        return np.where(valid, flat[idx], flat.dtype.type(fill))
+
+    neuron = {
+        "v": permute(state["neuron"]["v"], 0.0),
+        "c": permute(state["neuron"]["c"], 0.0),
+        "refrac": permute(state["neuron"]["refrac"], 0),
+    }
+    active = permute(state["active"], False)
+
+    # delay ring: (TY1, TX1, D, n1) -> per-slot neuron permutation
+    ring = np.asarray(state["i_ring"])
+    d_ring = ring.shape[2]
+    ring_flat = np.moveaxis(ring, 2, 0).reshape(d_ring, -1)
+    new_ring = np.where(valid[None], ring_flat[:, idx],
+                        ring_flat.dtype.type(0))
+    new_ring = np.moveaxis(new_ring, 0, 2)     # (TY2, TX2, D, n2)
+
+    t_old = np.asarray(state["t"]).reshape(-1)[0]
+    t = np.full((ty2, tx2), t_old, dtype=np.asarray(state["t"]).dtype)
+
+    def collapse(leaf):
+        arr = np.asarray(leaf)
+        out = np.zeros((ty2, tx2), dtype=arr.dtype)
+        out[0, 0] = arr.sum(dtype=arr.dtype)
+        return out
+
+    metrics = {k: collapse(v) for k, v in state["metrics"].items()}
+
+    base_key = jnp.asarray(np.asarray(state["rng"]).reshape(-1, 2)[0])
+    rng = np.stack([
+        np.stack([np.asarray(jax.random.fold_in(base_key, y * tx2 + x))
+                  for x in range(tx2)])
+        for y in range(ty2)])
+
+    return {
+        "neuron": {k: jnp.asarray(v) for k, v in neuron.items()},
+        "i_ring": jnp.asarray(new_ring),
+        "t": jnp.asarray(t),
+        "rng": jnp.asarray(rng),
+        "active": jnp.asarray(active),
+        "metrics": {k: jnp.asarray(v) for k, v in metrics.items()},
+    }

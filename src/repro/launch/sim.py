@@ -1,0 +1,134 @@
+"""Segmented, checkpointed long-run SNN simulation launcher.
+
+The paper's DPSNN jobs are multi-hour distributed runs that must survive
+preemption and come back on whatever process geometry the scheduler
+grants next.  This CLI drives the distributed engine the same way:
+fixed-size scan segments, async checkpoints between segments, SIGTERM
+preemption, and elastic re-tiling on resume.
+
+Fresh run (1x1 tiling on a single host device)::
+
+    PYTHONPATH=src python -m repro.launch.sim --grid 4 --law gaussian \\
+        --steps 200 --segment-steps 50 --ckpt-dir /tmp/snn_ckpt
+
+Preempt it (``kill -TERM <pid>``, or deterministically with
+``--preempt-after N`` segments), then resume -- optionally on a
+different tiling (needs a mesh with tiles_y*tiles_x devices, e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=2``)::
+
+    PYTHONPATH=src python -m repro.launch.sim --grid 4 --law gaussian \\
+        --steps 200 --segment-steps 50 --ckpt-dir /tmp/snn_ckpt \\
+        --tiles 2x1 --resume --retile
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.checkpoint.store import latest_step
+from repro.configs.snn import reduced_case
+from repro.core.dist_engine import DistConfig
+from repro.core.engine import EngineConfig, firing_rate_hz
+from repro.core.grid import ColumnGrid, TileDecomposition
+from repro.launch.mesh import make_host_mesh
+from repro.parallel.compat import make_mesh
+from repro.runtime import DriverConfig, SimDriver
+
+
+def parse_tiles(spec):
+    if spec is None:
+        return None
+    try:
+        ty, tx = (int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--tiles {spec!r}: expected TYxTX, e.g. 2x1")
+    return ty, tx
+
+
+def build_driver(args) -> SimDriver:
+    tiles = parse_tiles(args.tiles)
+    if tiles is None:
+        mesh = make_host_mesh()
+        tiles = mesh.devices.shape
+    else:
+        mesh = make_mesh(tiles, ("data", "model"))
+    case = reduced_case(args.law, grid=args.grid,
+                        n_per_column=args.neurons_per_column)
+    law = case.connectivity()
+    dec = TileDecomposition(
+        grid=ColumnGrid(*case.grid, case.n_per_column),
+        tiles_y=tiles[0], tiles_x=tiles[1], radius=law.radius)
+    dist = DistConfig(engine=EngineConfig(decomp=dec, law=law,
+                                          seed=args.seed))
+    last = latest_step(args.ckpt_dir)
+    if last is not None and not args.resume:
+        raise SystemExit(
+            f"{args.ckpt_dir} already holds a checkpoint at sim step "
+            f"{last}; pass --resume to continue it or use a fresh "
+            "--ckpt-dir")
+    if args.resume and last is None:
+        # a silent fresh start here would restart a multi-hour job from
+        # step 0 while reporting success
+        raise SystemExit(
+            f"--resume: no checkpoint found in {args.ckpt_dir}")
+    return SimDriver(
+        DriverConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                     keep=args.keep),
+        dist, mesh, segment_steps=args.segment_steps,
+        allow_retile=args.retile,
+        preempt_after_segments=args.preempt_after)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--law", default="gaussian",
+                    choices=("gaussian", "exponential"))
+    ap.add_argument("--grid", type=int, default=8)
+    ap.add_argument("--neurons-per-column", type=int, default=60)
+    ap.add_argument("--steps", type=int, default=300,
+                    help="target sim step (rounded up to whole segments)")
+    ap.add_argument("--segment-steps", type=int, default=50)
+    ap.add_argument("--tiles", default=None,
+                    help="TYxTX tiling (default: host mesh shape)")
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="checkpoint every N segments")
+    ap.add_argument("--keep", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest checkpoint")
+    ap.add_argument("--retile", action="store_true",
+                    help="allow resuming a checkpoint written under a "
+                         "different tiling (elastic restart)")
+    ap.add_argument("--preempt-after", type=int, default=None,
+                    help="simulate a SIGTERM after N segments (testing)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write driver metrics_log JSON here")
+    args = ap.parse_args(argv)
+
+    driver = build_driver(args)
+    out = driver.run(args.steps)
+    t = int(np.max(np.asarray(out["state"]["t"])))
+    rate = firing_rate_hz(out["state"], driver.dist_cfg.engine)
+    print(f"final_step={t} preempted={out['preempted']} "
+          f"rate_hz={rate:.2f} "
+          f"synapses={driver.table_stats['n_synapses']} "
+          f"stragglers={len(out['stragglers'])}")
+    if args.metrics_out:
+        d = os.path.dirname(args.metrics_out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.metrics_out, "w") as f:
+            json.dump({"final_step": t, "preempted": out["preempted"],
+                       "rate_hz": rate,
+                       "tiles": list(driver.dist_cfg.tiles),
+                       "metrics": out["metrics"]}, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    main()

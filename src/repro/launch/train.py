@@ -21,6 +21,7 @@ from repro.data.pipeline import LMBatchPipeline
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.models.config import ShapeConfig
+from repro.models.transformer import init_model
 from repro.optim import adamw, warmup_cosine
 from repro.parallel.sharding import rules_for_mesh
 from repro.runtime import DriverConfig, TrainDriver
@@ -43,7 +44,7 @@ def build_trainer(arch: str, batch: int, seq: int, steps: int,
     rules = rules_for_mesh(mesh, **ov)
     shape = ShapeConfig("custom", seq, batch, "train")
 
-    params, specs = M.init_model(jax.random.PRNGKey(seed), cfg)
+    params, specs = init_model(jax.random.PRNGKey(seed), cfg)
     param_sh = rules.shardings(specs, mesh)
     opt = adamw(warmup_cosine(lr, min(50, steps // 4 + 1), steps))
     opt_specs = opt.state_specs(specs)
@@ -68,10 +69,25 @@ def build_trainer(arch: str, batch: int, seq: int, steps: int,
         params, opt_state, out = jit_step(params, opt_state, batch)
         return (params, opt_state), out
 
+    # the train step donates its buffers, so a retry-restore before the
+    # first checkpoint must REBUILD the state (same seed -> identical
+    # params), never hand back the donated originals
+    first_state = [(params, opt_state)]
+
+    def init_state_fn():
+        if first_state:
+            return first_state.pop()
+        p, _ = init_model(jax.random.PRNGKey(seed), cfg)
+        p = jax.device_put(p, param_sh)
+        return p, jax.device_put(opt.init(p), opt_sh)
+
     driver = TrainDriver(
         DriverConfig(ckpt_dir=ckpt_dir, ckpt_every=ckpt_every),
         step_fn=driver_step, batch_fn=batch_fn,
-        init_state_fn=lambda: (params, opt_state),
+        init_state_fn=init_state_fn,
+        abstract_state=jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            (params, opt_state)),
         fault_hook=fault_hook)
     return driver, cfg
 

@@ -1,3 +1,5 @@
-"""Fault-tolerant training runtime."""
+"""Fault-tolerant runtime: training and long-run simulation drivers."""
 
-from .driver import TrainDriver, DriverConfig, StragglerWatchdog
+from .driver import (TrainDriver, DriverConfig, FaultTolerantLoop,
+                     StragglerWatchdog)
+from .sim_driver import SimDriver

@@ -1,4 +1,4 @@
-"""Fault-tolerant training driver.
+"""Fault-tolerant host-side driver loops.
 
 What a 1000-node run actually needs from the host-side loop:
 
@@ -16,6 +16,11 @@ What a 1000-node run actually needs from the host-side loop:
     next step boundary and exits cleanly (maintenance-event protocol);
   * **elastic restart** -- checkpoints restore onto a different mesh via
     resharding (see checkpoint.store), exercised in tests.
+
+All of that machinery lives in ``FaultTolerantLoop`` and is shared by
+the two concrete drivers: ``TrainDriver`` (LM training, unit = one
+optimizer step) and ``runtime.sim_driver.SimDriver`` (long-run SNN
+simulation, unit = one fixed-size scan segment).
 """
 
 from __future__ import annotations
@@ -71,21 +76,20 @@ class StragglerWatchdog:
         return is_straggler
 
 
-class TrainDriver:
-    """Runs ``step_fn(state, batch) -> (state, metrics)`` with fault
-    tolerance.  ``state`` is any pytree (params + opt state + counters);
-    ``batch_fn(step) -> batch`` must be deterministic in ``step``."""
+class FaultTolerantLoop:
+    """Shared retry / watchdog / preemption / checkpoint machinery.
 
-    def __init__(self, cfg: DriverConfig, step_fn: Callable,
-                 batch_fn: Callable, init_state_fn: Callable,
-                 shardings=None,
-                 fault_hook: Optional[Callable] = None):
+    Subclasses implement ``_restore_or_init() -> (start_step, state)``
+    and ``_step_once(state, step) -> (state, metrics)`` and may override
+    ``_save``.  ``step_size`` is the amount ``step`` advances per
+    ``_step_once`` call (1 for training steps, ``segment_steps`` for the
+    segmented sim driver, whose step counter is the sim time ``t``).
+    """
+
+    step_size: int = 1
+
+    def __init__(self, cfg: DriverConfig):
         self.cfg = cfg
-        self.step_fn = step_fn
-        self.batch_fn = batch_fn
-        self.init_state_fn = init_state_fn
-        self.shardings = shardings
-        self.fault_hook = fault_hook          # tests inject failures here
         self.watchdog = StragglerWatchdog(cfg.straggler_factor,
                                           cfg.straggler_window)
         self.ckpt = AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
@@ -101,17 +105,27 @@ class TrainDriver:
         log.warning("SIGTERM: checkpoint at next step boundary, then exit")
         self.preempted = True
 
-    # ------------------------------------------------------------------
+    # ---- subclass API -------------------------------------------------
     def _restore_or_init(self):
-        last = latest_step(self.cfg.ckpt_dir)
-        state = self.init_state_fn()
-        if last is None:
-            return 0, state
-        log.info("restoring from step %d", last)
-        state = restore_checkpoint(self.cfg.ckpt_dir, last, state,
-                                   shardings=self.shardings)
-        return last, state
+        raise NotImplementedError
 
+    def _step_once(self, state, step):
+        raise NotImplementedError
+
+    def _save(self, step: int, state):
+        # AsyncCheckpointer.save snapshots to host synchronously, so the
+        # next (donating) step call cannot invalidate what gets written.
+        self.ckpt.save(step, state)
+
+    def _on_rewind(self, step: int):
+        """Drop per-step records from the abandoned timeline after a
+        failure restore: replayed steps must appear exactly once in the
+        logs (``metrics_log`` is exported as a machine-readable
+        artifact)."""
+        self.metrics_log = [m for m in self.metrics_log
+                            if m["step"] < step]
+
+    # ---- the loop -----------------------------------------------------
     def run(self, n_steps: int) -> Dict[str, Any]:
         start, state = self._restore_or_init()
         step = start
@@ -120,10 +134,7 @@ class TrainDriver:
         while step < n_steps and not self.preempted:
             t0 = time.perf_counter()
             try:
-                if self.fault_hook:
-                    self.fault_hook(step)
-                batch = self.batch_fn(step)
-                state, metrics = self.step_fn(state, batch)
+                state, metrics = self._step_once(state, step)
                 jax.block_until_ready(metrics)
             except Exception as e:            # noqa: BLE001 - retry path
                 # retries count consecutive failures of the SAME step
@@ -137,8 +148,17 @@ class TrainDriver:
                     self.ckpt.wait()
                     raise
                 time.sleep(self.cfg.backoff_s * 2 ** (retries - 1))
-                rstep, state = self._restore_or_init()
-                step = rstep
+                try:
+                    # drain in-flight async writes so the restore sees
+                    # the newest checkpoint, not a mid-write directory
+                    self.ckpt.wait()
+                except Exception as ce:        # noqa: BLE001
+                    # a failing writer must not abort the retry; the
+                    # error stays set and surfaces at the final wait()
+                    log.warning("checkpoint writer error during "
+                                "retry: %s", ce)
+                step, state = self._restore_or_init()
+                self._on_rewind(step)
                 continue
             dt = time.perf_counter() - t0
             self.watchdog.observe(step, dt)
@@ -146,12 +166,58 @@ class TrainDriver:
                 {"step": step, "dt": dt,
                  **{k: float(np.asarray(v)) for k, v in metrics.items()
                     if np.asarray(v).size == 1}})
-            step += 1
-            if step % self.cfg.ckpt_every == 0 or self.preempted \
-                    or step == n_steps:
-                self.ckpt.save(step, state)
+            step += self.step_size
+            if (step // self.step_size) % self.cfg.ckpt_every == 0 \
+                    or self.preempted or step >= n_steps:
+                self._save(step, state)
         self.ckpt.wait()
         return {"final_step": step, "state": state,
                 "stragglers": self.watchdog.flagged,
                 "metrics": self.metrics_log,
                 "preempted": self.preempted}
+
+
+class TrainDriver(FaultTolerantLoop):
+    """Runs ``step_fn(state, batch) -> (state, metrics)`` with fault
+    tolerance.  ``state`` is any pytree (params + opt state + counters);
+    ``batch_fn(step) -> batch`` must be deterministic in ``step``.
+
+    ``abstract_state``: optional pytree of ``ShapeDtypeStruct`` matching
+    the state.  When restoring, the ``like`` tree only needs shapes and
+    dtypes -- materializing a throwaway ``init_state_fn()`` state first
+    would double peak memory right at restart.  Without it the shapes
+    are derived via ``jax.eval_shape(init_state_fn)`` (no device
+    allocation for traced init functions).
+    """
+
+    def __init__(self, cfg: DriverConfig, step_fn: Callable,
+                 batch_fn: Callable, init_state_fn: Callable,
+                 shardings=None,
+                 fault_hook: Optional[Callable] = None,
+                 abstract_state=None):
+        super().__init__(cfg)
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.init_state_fn = init_state_fn
+        self.shardings = shardings
+        self.fault_hook = fault_hook          # tests inject failures here
+        self.abstract_state = abstract_state
+
+    # ------------------------------------------------------------------
+    def _restore_or_init(self):
+        last = latest_step(self.cfg.ckpt_dir)
+        if last is None:
+            return 0, self.init_state_fn()
+        log.info("restoring from step %d", last)
+        like = self.abstract_state
+        if like is None:
+            like = jax.eval_shape(self.init_state_fn)
+        state = restore_checkpoint(self.cfg.ckpt_dir, last, like,
+                                   shardings=self.shardings)
+        return last, state
+
+    def _step_once(self, state, step):
+        if self.fault_hook:
+            self.fault_hook(step)
+        batch = self.batch_fn(step)
+        return self.step_fn(state, batch)

@@ -141,6 +141,20 @@ def test_checkpoint_detects_corruption(tmp_path, rng):
         restore_checkpoint(d, 1, tree)
 
 
+def test_checkpoint_rejects_dtype_drift(tmp_path):
+    """A leaf whose on-disk dtype differs from the expected one must be
+    refused -- silently restoring it would recompile or corrupt the
+    jitted step (regression: restore used to check shapes only)."""
+    save_checkpoint(str(tmp_path), 1, {"a": jnp.zeros((4,), jnp.float32)})
+    with pytest.raises(ValueError, match="dtype"):
+        restore_checkpoint(str(tmp_path), 1,
+                           {"a": jax.ShapeDtypeStruct((4,), jnp.float16)})
+    # same shapes, same dtypes: fine
+    out = restore_checkpoint(str(tmp_path), 1,
+                             {"a": jax.ShapeDtypeStruct((4,), jnp.float32)})
+    assert np.asarray(out["a"]).dtype == np.float32
+
+
 def test_checkpoint_structure_mismatch(tmp_path):
     tree = {"a": jnp.zeros((3,))}
     save_checkpoint(str(tmp_path), 1, tree)

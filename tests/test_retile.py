@@ -1,0 +1,154 @@
+"""Elastic re-tiling: exact state permutation by global column id.
+
+Pure host-side checks (no multi-device mesh needed): every neuron's
+(v, c, refrac), its active flag, and every in-flight delay-ring current
+must land at the correct new (tile, local-index) for its global column
+id; ``t`` and the global metric totals are preserved.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.connectivity import gaussian_law
+from repro.core.dist_engine import DistConfig, init_dist_state
+from repro.core.engine import EngineConfig
+from repro.core.grid import ColumnGrid, TileDecomposition
+from repro.core.retile import (global_column_ids, neuron_gather_map,
+                               retile_config, retile_state)
+
+# grid 3x3 does not divide either tiling evenly -> both layouts carry
+# padded columns, exercising the -1 (no source neuron) paths
+H, W, NPC = 3, 3, 4
+
+
+def _cfg(ty, tx):
+    law = gaussian_law()
+    dec = TileDecomposition(grid=ColumnGrid(H, W, NPC), tiles_y=ty,
+                            tiles_x=tx, radius=law.radius)
+    return DistConfig(engine=EngineConfig(decomp=dec, law=law, seed=2))
+
+
+def _global_neuron_ids(dec):
+    """(TY, TX, n_local) global neuron id, -1 on padded slots."""
+    gid = global_column_ids(dec)
+    gnid = gid[..., None] * NPC + np.arange(NPC)
+    return np.where(gid[..., None] >= 0, gnid, -1).reshape(
+        dec.tiles_y, dec.tiles_x, dec.n_local)
+
+
+def _patterned_state(cfg, t=5):
+    """State whose every leaf encodes the global neuron id it belongs to."""
+    dec = cfg.engine.decomp
+    st = {k: np.asarray(v) if not isinstance(v, dict)
+          else {kk: np.asarray(vv) for kk, vv in v.items()}
+          for k, v in init_dist_state(cfg).items()}
+    gnid = _global_neuron_ids(dec)
+    valid = gnid >= 0
+    st["neuron"]["v"] = np.where(valid, gnid, 0).astype(np.float32)
+    st["neuron"]["c"] = np.where(valid, gnid + 0.25, 0).astype(np.float32)
+    st["neuron"]["refrac"] = np.where(valid, gnid % 5, 0).astype(np.int32)
+    d_ring = st["i_ring"].shape[2]
+    slots = np.arange(d_ring)[None, None, :, None]
+    ring = 1000.0 * slots + gnid[:, :, None, :]
+    st["i_ring"] = np.where(valid[:, :, None, :], ring, 0.0).astype(
+        np.float32)
+    st["t"] = np.full(st["t"].shape, t, np.int32)
+    st["metrics"] = {
+        "spikes": np.arange(1, valid.shape[0] * valid.shape[1] + 1,
+                            dtype=np.float32).reshape(valid.shape[:2]),
+        "events": np.full(valid.shape[:2], 2.5, np.float32),
+        "dropped": np.zeros(valid.shape[:2], np.float32),
+    }
+    return st
+
+
+def test_gather_map_is_bijection_on_logical_neurons():
+    old, new = _cfg(1, 2).engine.decomp, _cfg(2, 1).engine.decomp
+    src = neuron_gather_map(old, new)
+    taken = np.sort(src[src >= 0])
+    # every logical neuron of the old layout appears exactly once
+    gnid_old = _global_neuron_ids(old).reshape(-1)
+    want = np.sort(np.where(gnid_old >= 0)[0])
+    np.testing.assert_array_equal(taken, want)
+
+
+@pytest.mark.parametrize("old_tiles,new_tiles", [((1, 2), (2, 1)),
+                                                 ((2, 1), (1, 2))])
+def test_retile_places_state_by_global_column_id(old_tiles, new_tiles):
+    old_cfg, new_cfg = _cfg(*old_tiles), _cfg(*new_tiles)
+    old_d, new_d = old_cfg.engine.decomp, new_cfg.engine.decomp
+    st = _patterned_state(old_cfg, t=5)
+    out = retile_state(st, old_d, new_d)
+
+    gnid = _global_neuron_ids(new_d)
+    valid = gnid >= 0
+    np.testing.assert_array_equal(
+        np.asarray(out["neuron"]["v"]),
+        np.where(valid, gnid, 0).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(out["neuron"]["c"]),
+        np.where(valid, gnid + 0.25, 0).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(out["neuron"]["refrac"]),
+        np.where(valid, gnid % 5, 0).astype(np.int32))
+    # delay ring: each in-flight current moved with its target neuron,
+    # slot axis untouched
+    d_ring = np.asarray(out["i_ring"]).shape[2]
+    slots = np.arange(d_ring)[None, None, :, None]
+    want_ring = np.where(valid[:, :, None, :],
+                         1000.0 * slots + gnid[:, :, None, :], 0.0)
+    np.testing.assert_array_equal(np.asarray(out["i_ring"]),
+                                  want_ring.astype(np.float32))
+    # t preserved (so t % d_ring slot alignment survives)
+    assert np.asarray(out["t"]).shape == (new_d.tiles_y, new_d.tiles_x)
+    np.testing.assert_array_equal(np.asarray(out["t"]), 5)
+    # active mask equals the new decomposition's own mask
+    want_active = np.stack([
+        np.stack([np.repeat(new_d.active_mask(y, x).ravel(), NPC)
+                  for x in range(new_d.tiles_x)])
+        for y in range(new_d.tiles_y)])
+    np.testing.assert_array_equal(np.asarray(out["active"]), want_active)
+    # metric totals preserved
+    for k in ("spikes", "events", "dropped"):
+        assert np.asarray(out["metrics"][k]).sum() == pytest.approx(
+            st["metrics"][k].sum())
+    # dtypes survive the relayout (would otherwise poison the jitted step)
+    for name, leaf in (("v", out["neuron"]["v"]),
+                       ("refrac", out["neuron"]["refrac"]),
+                       ("t", out["t"]), ("i_ring", out["i_ring"])):
+        assert np.asarray(leaf).dtype == np.asarray(
+            st["neuron"][name] if name in ("v", "refrac")
+            else st[name]).dtype, name
+
+
+def test_retile_identity_roundtrip():
+    """1x2 -> 2x1 -> 1x2 restores the exact original neuron state."""
+    a, b = _cfg(1, 2), _cfg(2, 1)
+    st = _patterned_state(a, t=7)
+    back = retile_state(
+        retile_state(st, a.engine.decomp, b.engine.decomp),
+        b.engine.decomp, a.engine.decomp)
+    for k in ("v", "c", "refrac"):
+        np.testing.assert_array_equal(np.asarray(back["neuron"][k]),
+                                      st["neuron"][k])
+    np.testing.assert_array_equal(np.asarray(back["i_ring"]), st["i_ring"])
+    np.testing.assert_array_equal(np.asarray(back["active"]), st["active"])
+
+
+def test_retile_config_keeps_everything_but_tiles():
+    cfg = _cfg(1, 2)
+    new = retile_config(cfg, 2, 1)
+    assert new.tiles == (2, 1)
+    assert new.engine.decomp.grid == cfg.engine.decomp.grid
+    assert new.engine.seed == cfg.engine.seed
+    assert new.engine.law == cfg.engine.law
+
+
+def test_gather_map_rejects_grid_mismatch():
+    law = gaussian_law()
+    a = TileDecomposition(grid=ColumnGrid(3, 3, 4), tiles_y=1, tiles_x=2,
+                          radius=law.radius)
+    b = TileDecomposition(grid=ColumnGrid(4, 3, 4), tiles_y=2, tiles_x=1,
+                          radius=law.radius)
+    with pytest.raises(ValueError, match="grid"):
+        neuron_gather_map(a, b)

@@ -46,6 +46,9 @@ def test_driver_recovers_from_injected_fault(tmp_path):
     assert fired == [7]
     assert out["final_step"] == 12
     assert float(np.asarray(out["state"]["x"])) == 12.0  # exact replay
+    # the abandoned timeline is pruned: each step logged exactly once
+    steps = [m["step"] for m in out["metrics"]]
+    assert steps == list(range(12))
 
 
 def test_driver_gives_up_after_max_retries(tmp_path):
@@ -81,6 +84,32 @@ def test_preemption_checkpoints_and_exits(tmp_path):
     assert out["preempted"] and out["final_step"] == 5
     from repro.checkpoint.store import latest_step
     assert latest_step(str(tmp_path)) == 5  # clean checkpoint on exit
+
+
+def test_restore_does_not_materialize_init_state(tmp_path):
+    """With ``abstract_state`` given, a restore never calls
+    ``init_state_fn`` -- at scale, materializing a throwaway init state
+    doubles peak memory right at restart (regression)."""
+    import jax
+
+    _driver(tmp_path).run(6)
+
+    def boom():
+        raise AssertionError("init_state_fn must not run on restore")
+
+    d2 = TrainDriver(
+        DriverConfig(ckpt_dir=str(tmp_path), backoff_s=0.01,
+                     handle_sigterm=False),
+        step_fn=lambda s, b: ({"x": s["x"] + b},
+                              {"loss": float(np.asarray(s["x"]))}),
+        batch_fn=lambda step: jnp.asarray(1.0),
+        init_state_fn=boom,
+        abstract_state={"x": jax.ShapeDtypeStruct((), jnp.float32)})
+    start, state = d2._restore_or_init()
+    assert start == 6 and float(np.asarray(state["x"])) == 6.0
+    out = d2.run(9)
+    assert out["final_step"] == 9
+    assert float(np.asarray(out["state"]["x"])) == 9.0
 
 
 def test_elastic_restore_via_driver(tmp_path):

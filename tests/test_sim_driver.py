@@ -1,0 +1,194 @@
+"""Segmented long-run SNN driver: resume bit-identity, preemption,
+retry-and-replay.  Single-device (1x1 tiling); the multi-device retile
+resume lives in tests/test_multidevice.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.connectivity import gaussian_law
+from repro.core.dist_engine import DistConfig
+from repro.core.engine import EngineConfig, firing_rate_hz
+from repro.core.grid import ColumnGrid, TileDecomposition
+from repro.parallel.compat import make_mesh
+from repro.runtime import DriverConfig, SimDriver
+
+N = 40          # spiking sets in around step ~34 at this scale/seed
+
+
+def _dist_cfg(seed=3):
+    law = gaussian_law()
+    dec = TileDecomposition(grid=ColumnGrid(4, 4, 10), tiles_y=1,
+                            tiles_x=1, radius=law.radius)
+    return DistConfig(engine=EngineConfig(decomp=dec, law=law, seed=seed))
+
+
+def _driver(ckpt_dir, seg, **kw):
+    cfg = DriverConfig(ckpt_dir=str(ckpt_dir),
+                       ckpt_every=kw.pop("ckpt_every", 1),
+                       backoff_s=0.01, handle_sigterm=False)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    return SimDriver(cfg, _dist_cfg(), mesh, segment_steps=seg, **kw)
+
+
+def _metric_totals(state):
+    return {k: float(np.asarray(jnp.sum(v)))
+            for k, v in state["metrics"].items()}
+
+
+def test_resume_bit_identity(tmp_path):
+    """N steps straight == N/2 + save + kill + restore + N/2, exactly."""
+    straight = _driver(tmp_path / "a", seg=N)
+    out_a = straight.run(N)
+    assert out_a["final_step"] == N
+
+    first = _driver(tmp_path / "b", seg=N // 2)
+    first.run(N // 2)
+    # fresh driver = simulated process restart; restores from checkpoint
+    second = _driver(tmp_path / "b", seg=N // 2)
+    out_b = second.run(N)
+    assert out_b["final_step"] == N
+
+    spikes_a = straight.spike_counts()
+    spikes_b = np.concatenate([first.spike_counts(),
+                               second.spike_counts()])
+    assert spikes_a.shape == (N,) and spikes_a.sum() > 0
+    np.testing.assert_array_equal(spikes_a, spikes_b)
+    assert _metric_totals(out_a["state"]) == _metric_totals(out_b["state"])
+    # the full state is bit-identical, not just the summaries
+    for la, lb in zip(jax.tree.leaves(out_a["state"]),
+                      jax.tree.leaves(out_b["state"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_preemption_checkpoints_and_resumes(tmp_path):
+    d1 = _driver(tmp_path, seg=10, preempt_after_segments=1)
+    out1 = d1.run(N)
+    assert out1["preempted"] and out1["final_step"] == 10
+    from repro.checkpoint.store import latest_step
+    assert latest_step(str(tmp_path)) == 10
+
+    d2 = _driver(tmp_path, seg=10)
+    out2 = d2.run(N)
+    assert not out2["preempted"] and out2["final_step"] == N
+    assert int(np.max(np.asarray(out2["state"]["t"]))) == N
+    rate = firing_rate_hz(out2["state"], d2.dist_cfg.engine)
+    assert np.isfinite(rate) and rate >= 0
+
+
+def test_segment_failure_restores_and_replays(tmp_path):
+    ref = _driver(tmp_path / "ref", seg=10)
+    ref_out = ref.run(30)
+
+    fired = []
+
+    def hook(step):
+        if step == 20 and not fired:
+            fired.append(step)
+            raise RuntimeError("injected node failure")
+
+    d = _driver(tmp_path / "x", seg=10, fault_hook=hook)
+    out = d.run(30)
+    assert fired == [20]
+    assert out["final_step"] == 30
+    # replayed segment appears once and the run is an exact replay
+    np.testing.assert_array_equal(ref.spike_counts(), d.spike_counts())
+    assert _metric_totals(ref_out["state"]) == _metric_totals(out["state"])
+
+
+def test_replay_does_not_duplicate_metrics_log(tmp_path):
+    """A failure after an un-checkpointed segment rewinds past logged
+    entries; the abandoned timeline must be pruned so the exported
+    metrics_log (--metrics-out) carries each segment exactly once."""
+    fired = []
+
+    def hook(step):
+        if step == 30 and not fired:
+            fired.append(step)
+            raise RuntimeError("injected failure after unsaved segment")
+
+    d = _driver(tmp_path, seg=10, ckpt_every=2, fault_hook=hook)
+    out = d.run(40)
+    assert fired == [30] and out["final_step"] == 40
+    # checkpoint was at 20, so the logged-but-abandoned step-20 segment
+    # is replayed: it must appear once, in order
+    assert [m["step"] for m in d.metrics_log] == [0, 10, 20, 30]
+    np.testing.assert_array_equal(
+        np.sort(np.fromiter(d._spikes.keys(), int)), [0, 10, 20, 30])
+
+
+def test_replay_from_scratch_does_not_duplicate_logs(tmp_path):
+    """A failure before any checkpoint exists rewinds to step 0; the
+    whole abandoned timeline must be pruned from the logs."""
+    fired = []
+
+    def hook(step):
+        if step == 20 and not fired:
+            fired.append(step)
+            raise RuntimeError("injected failure before first checkpoint")
+
+    d = _driver(tmp_path, seg=10, ckpt_every=100, fault_hook=hook)
+    out = d.run(40)
+    assert fired == [20] and out["final_step"] == 40
+    assert [m["step"] for m in d.metrics_log] == [0, 10, 20, 30]
+    assert d.spike_counts().shape == (40,)
+
+
+def test_resume_refuses_silent_retile(tmp_path):
+    _driver(tmp_path, seg=10).run(10)
+    law = gaussian_law()
+    dec = TileDecomposition(grid=ColumnGrid(4, 4, 10), tiles_y=1,
+                            tiles_x=2, radius=law.radius)
+    dist = DistConfig(engine=EngineConfig(decomp=dec, law=law, seed=3))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    d = SimDriver(DriverConfig(ckpt_dir=str(tmp_path),
+                               handle_sigterm=False),
+                  dist, mesh, segment_steps=10)
+    with pytest.raises(ValueError, match="retile"):
+        d._restore_or_init()
+
+
+def test_resume_refuses_grid_mismatch(tmp_path):
+    _driver(tmp_path, seg=10).run(10)
+    law = gaussian_law()
+    dec = TileDecomposition(grid=ColumnGrid(5, 5, 10), tiles_y=1,
+                            tiles_x=1, radius=law.radius)
+    dist = DistConfig(engine=EngineConfig(decomp=dec, law=law, seed=3))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    d = SimDriver(DriverConfig(ckpt_dir=str(tmp_path),
+                               handle_sigterm=False),
+                  dist, mesh, segment_steps=10, allow_retile=True)
+    with pytest.raises(ValueError, match="grid"):
+        d._restore_or_init()
+
+
+def test_resume_refuses_seed_or_law_drift(tmp_path):
+    """The relayout is only valid for the same model: a resume with a
+    different synapse seed (or law) must be refused, not silently
+    continued against freshly sampled different tables."""
+    _driver(tmp_path, seg=10).run(10)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    d = SimDriver(DriverConfig(ckpt_dir=str(tmp_path),
+                               handle_sigterm=False),
+                  _dist_cfg(seed=4), mesh, segment_steps=10)
+    with pytest.raises(ValueError, match="seed"):
+        d._restore_or_init()
+
+
+def test_checkpoint_meta_rides_inside_checkpoint(tmp_path):
+    """Tiling/model meta is stored in the step's own manifest (atomic
+    with the checkpoint), not a sidecar that can skew on crash."""
+    import os
+    from repro.checkpoint.store import checkpoint_meta
+    _driver(tmp_path, seg=10).run(10)
+    assert not os.path.exists(tmp_path / "sim_meta.json")
+    meta = checkpoint_meta(str(tmp_path), 10)
+    assert (meta["tiles_y"], meta["tiles_x"]) == (1, 1)
+    assert meta["grid"] == [4, 4, 10]
+    assert meta["law"] == "gaussian" and meta["seed"] == 3
+
+
+def test_rejects_nonpositive_segment(tmp_path):
+    with pytest.raises(ValueError, match="segment_steps"):
+        _driver(tmp_path, seg=0)
