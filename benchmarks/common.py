@@ -3,13 +3,19 @@
 import json
 import os
 
-RESULTS = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(REPO_ROOT, "results")
 
 
-def write_json(name: str, payload) -> str:
+def write_json(name: str, payload, also_root: bool = False) -> str:
+    """Write ``results/<name>``; ``also_root`` additionally writes the
+    repo-root copy -- the committed, cross-PR trajectory file (the
+    ``results/`` copy is the per-run CI artifact)."""
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, name)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)
+    if also_root:
+        with open(os.path.join(REPO_ROOT, name), "w") as f:
+            json.dump(payload, f, indent=1, default=str)
     return path

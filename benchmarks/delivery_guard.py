@@ -1,0 +1,77 @@
+"""CI regression guard for the event-delivery kernel.
+
+Re-measures the CPU-interpret kernel-vs-XLA A/B
+(``benchmarks.fig2_cost_ratio.bench_event_delivery``) and fails (exit
+code 1) if either law's ``kernel_vs_xla_wall_ratio`` regresses by more
+than ``--tol`` (default 25%) against the committed repo-root
+``BENCH_event_delivery.json`` trajectory.
+
+By default the measurement replicates the baseline's own grid and step
+count (read from the JSON): the wall ratio is NOT step-count-invariant
+-- the kernel arm's cost tracks the firing rate over the measured
+window while the XLA arm streams the full capacity head-room regardless
+-- so comparing against the committed number is only meaningful at the
+committed configuration.  Kept OUT of the tier-1 test job so the
+``pytest -m "not slow"`` gate stays under two minutes.
+
+Baseline hygiene: even with paired timing (``measure_pair`` interleaves
+the arms so both sample the same machine state) the measured ratio
+spreads noticeably on shared containers -- observed gaussian spread
+0.7-1.9 across quiet runs, partly a per-process bimodality of the XLA
+arm's compiled artifact (~14 s vs ~23 s for identical work).  Commit
+baselines from the HIGH side of the observed spread: the limit is
+``committed * (1 + tol)``, so a conservative (high) committed ratio
+absorbs machine-state swings without false-failing, while order-of-
+magnitude regressions (the 3.5-7x class this kernel rework fixed) are
+still caught in every observed state.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+from .common import REPO_ROOT
+from .fig2_cost_ratio import bench_event_delivery
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--grid", type=int, default=None,
+                    help="default: the baseline's grid")
+    ap.add_argument("--n-per-col", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="default: the baseline's step count")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed fractional ratio regression "
+                         "(0.25 = 25%%)")
+    ap.add_argument("--baseline",
+                    default=os.path.join(REPO_ROOT,
+                                         "BENCH_event_delivery.json"))
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    grid_y, grid_x, n_per_col = (int(v) for v in base["grid"].split("x"))
+    assert grid_y == grid_x, "baseline grid is square by construction"
+    grid = args.grid if args.grid is not None else grid_y
+    npc = args.n_per_col if args.n_per_col is not None else n_per_col
+    steps = args.steps if args.steps is not None else int(base["steps"])
+
+    fresh = bench_event_delivery(grid=grid, n_per_col=npc,
+                                 steps=steps, update_root=False)
+    failed = False
+    for law, ab in fresh["laws"].items():
+        committed = base["laws"][law]["kernel_vs_xla_wall_ratio"]
+        measured = ab["kernel_vs_xla_wall_ratio"]
+        limit = committed * (1.0 + args.tol)
+        bad = measured > limit
+        failed |= bad
+        print(f"{law}: kernel/xla wall ratio {measured:.3f} "
+              f"(committed {committed:.3f}, limit {limit:.3f}) "
+              f"{'REGRESSION' if bad else 'ok'}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

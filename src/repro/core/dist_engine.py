@@ -175,6 +175,10 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
     bands = spec.halo_bands()
     band_idx = [jnp.asarray(spec.band_positions_exc(b)) for b in bands]
     radius = d.radius
+    # Hoisted: the static lane-packed delivery sizing the kernel layer
+    # compiles against (recomputing it per scan trace re-runs the
+    # numpy fan-out analysis behind halo_bands()).
+    plan = spec.delivery_plan() if e.mode == "event" else None
 
     def shard_step(state, tables):
         key, k_ext = jax.random.split(state["rng"])
@@ -205,7 +209,7 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
         if e.mode == "event":
             i_ring, ev, dr = deliver_event_tiers(
                 tables, spikes, halo_spikes, spec, i_ring, slot,
-                e.d_ring, e.kernels_enabled)
+                e.d_ring, e.kernels_enabled, plan=plan)
         else:
             i_ring = deliver_gather_all(tables["local"], spikes, i_ring,
                                         slot, e.d_ring)

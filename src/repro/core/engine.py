@@ -112,24 +112,27 @@ def external_drive(rng_key, n_local: int, cfg: EngineConfig):
 
 
 def deliver_event_tiers(tables, spikes, halo_band_spikes, spec, i_ring,
-                        slot, d_ring: int, kernels_enabled: bool):
+                        slot, d_ring: int, kernels_enabled: bool,
+                        plan: Optional[list] = None):
     """Event-driven delivery of the local tier + every halo band.
 
     The single source of truth for both step bodies (single-shard
     ``step`` and the distributed ``shard_step``): tier sizing comes from
-    ``spec.delivery_plan()``, and the kernel path hands all tiers to one
-    fused ``synaptic_accum_banded`` launch while the XLA path loops
-    ``deliver_events`` per tier.  Returns (i_ring, events, dropped) as
-    f32 scalars.
+    ``spec.delivery_plan()`` (precompute it once per trace and pass it
+    as ``plan``), and the kernel path hands all tiers plus the plan to
+    one fused ``synaptic_accum_banded`` launch -- the kernel validates
+    its tables against the plan's lane-packed entry geometry -- while
+    the XLA path loops ``deliver_events`` per tier.  Returns (i_ring,
+    events, dropped) as f32 scalars.
     """
-    plan = spec.delivery_plan()
+    plan = spec.delivery_plan() if plan is None else plan
     halo = list(zip(plan[1:], tables["halo"], halo_band_spikes))
     if kernels_enabled:
         from ..kernels import ops as kops
         tiers = [(tables["local"], spikes, plan[0]["active_cap"])]
         tiers += [(tab, spk, p["active_cap"]) for p, tab, spk in halo]
         i_ring, ev, dr = kops.synaptic_accum_banded(
-            tiers, i_ring, slot, d_ring)
+            tiers, i_ring, slot, d_ring, plan=plan)
         return i_ring, ev.astype(jnp.float32), dr.astype(jnp.float32)
     i_ring, ev, dr = deliver_events(
         tables["local"], spikes, i_ring, slot, d_ring,
@@ -154,6 +157,7 @@ def step(state: dict, tables: dict, cfg: EngineConfig,
     """
     spec = cfg.spec()
     n_local = spec.n_local
+    plan = spec.delivery_plan() if cfg.mode == "event" else None
     key, k_ext = jax.random.split(state["rng"])
     slot = state["t"] % cfg.d_ring
 
@@ -173,7 +177,7 @@ def step(state: dict, tables: dict, cfg: EngineConfig,
     if cfg.mode == "event":
         i_ring, ev, dr = deliver_event_tiers(
             tables, spikes, halo_band_spikes, spec, i_ring, slot,
-            cfg.d_ring, cfg.kernels_enabled)
+            cfg.d_ring, cfg.kernels_enabled, plan=plan)
         metrics = {
             "spikes": metrics["spikes"] + jnp.sum(spikes),
             "events": metrics["events"] + ev,

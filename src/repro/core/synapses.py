@@ -43,6 +43,15 @@ from .grid import TileDecomposition
 
 MAX_HALO_BANDS = 8
 
+# Version of the table-sampling procedure.  ``build_tables(seed)`` is
+# deterministic *within* a version, but any change to the rng draw
+# sequence (e.g. v2: sampling vectorized across tile columns per
+# stencil offset, replacing the per-block loop of v1) yields a
+# different synapse realization for the same seed.  Rides in checkpoint
+# meta so a resume that would silently rebuild a different network is
+# refused instead (runtime/sim_driver.py).
+TABLE_REALIZATION_VERSION = 2
+
 
 # --------------------------------------------------------------------------
 # Spec: shapes and capacities, computed analytically
@@ -175,16 +184,42 @@ class SynapseTableSpec:
 
         One entry per delivery tier, local first then each halo band:
         ``{"cap": row_capacity, "active_cap": event-list size,
-        "rows": source rows}``.  Everything the kernel layer needs to
-        lay out its entry blocks is here -- tables supply only data.
+        "rows": source rows, "entries": active_cap * cap,
+        "entries_padded": entries lane-aligned}``.  Everything the
+        kernel layer needs to lay out its lane-packed entry blocks is
+        here -- tables supply only data -- and the kernel validates the
+        tables it is handed against this plan, so the engines compile
+        against a spec-level contract.
         """
-        plan = [{"cap": self.cap_local, "active_cap": self.active_cap_local,
-                 "rows": self.n_local}]
+        from ..kernels.synaptic_accum import LANES  # layout owner
+
+        def tier(cap, active_cap, rows):
+            entries = active_cap * cap
+            return {"cap": cap, "active_cap": active_cap, "rows": rows,
+                    "entries": entries,
+                    "entries_padded": -(-entries // LANES) * LANES}
+
+        plan = [tier(self.cap_local, self.active_cap_local, self.n_local)]
         for b in self.halo_bands():
-            plan.append({"cap": b["cap"],
-                         "active_cap": self.active_cap_band(b),
-                         "rows": b["rows"]})
+            plan.append(tier(b["cap"], self.active_cap_band(b), b["rows"]))
         return plan
+
+    def entry_geometry(self) -> dict:
+        """Lane-packed entry-block geometry of the fused delivery launch:
+        the ``(E / LANES, LANES)`` packed stream shape and the number of
+        ``ENTRY_BLOCK``-entry grid steps the kernel will take.  Shapes
+        only (derivable without materializing tables), so the dry-run
+        and the engines can size the launch from the spec alone.
+        """
+        from ..kernels.synaptic_accum import (ENTRY_BLOCK, ENTRY_SUBLANES,
+                                              LANES, packed_total)
+        total = sum(p["entries_padded"] for p in self.delivery_plan())
+        padded = packed_total(total)
+        return {"lanes": LANES, "entry_sublanes": ENTRY_SUBLANES,
+                "entry_block": ENTRY_BLOCK, "entries": total,
+                "entries_padded": padded,
+                "n_blocks": padded // ENTRY_BLOCK,
+                "packed_shape": (padded // LANES, LANES)}
 
     # ---- index maps (static numpy constants) ---------------------------
     def local_positions_in_region(self) -> np.ndarray:
@@ -276,6 +311,30 @@ def _pack_rows(n_rows: int, cap: int, row_ids, tgts, ws, dslots, wdt):
     return {"tgt": tgt_a, "w": w_a, "dslot": d_a, "nnz": nnz}, clipped
 
 
+def sample_blocks(rng, p: float, n_src: int, n_tgt: int, n_blocks: int):
+    """Vectorized sparse Bernoulli(p) over ``n_blocks`` independent
+    (n_src, n_tgt) blocks: one batched binomial draw for the per-block
+    synapse counts, one batched draw for the flat pair ids.
+
+    Returns (block_id, src, tgt), each (M,) with M the total sampled.
+    Distributionally identical to sampling each block separately, but a
+    constant number of rng calls regardless of the tile size -- table
+    materialization sits on the ``--retile`` restore path, so this is
+    user-visible restore latency.
+    """
+    empty = (np.empty(0, np.int64),) * 3
+    if n_blocks == 0:
+        return empty
+    n_pairs = n_src * n_tgt
+    m = rng.binomial(n_pairs, p, size=n_blocks)
+    total = int(m.sum())
+    if total == 0:
+        return empty
+    blk = np.repeat(np.arange(n_blocks), m)
+    flat = rng.integers(0, n_pairs, size=total)
+    return blk, flat // n_tgt, flat % n_tgt
+
+
 def build_tables(spec: SynapseTableSpec, tile_y: int, tile_x: int,
                  j_exc: float, j_inh: float, seed: int = 0,
                  w_jitter: float = 0.25) -> dict:
@@ -314,67 +373,53 @@ def build_tables(spec: SynapseTableSpec, tile_y: int, tile_x: int,
     loc = {"rows": [], "tgts": [], "ws": [], "ds": []}
     hal = [{"rows": [], "tgts": [], "ws": [], "ds": []} for _ in bands]
 
-    def sample_block(p, n_src, n_tgt):
-        """Sparse Bernoulli(p) over an (n_src, n_tgt) block -> (src, tgt)."""
-        n_pairs = n_src * n_tgt
-        m = rng.binomial(n_pairs, p)
-        if m == 0:
-            return (np.empty(0, np.int64),) * 2
-        flat = rng.integers(0, n_pairs, size=m)
-        return flat // n_tgt, flat % n_tgt
-
     # ---- local (same-column) synapses: all neurons project --------------
-    for ly in range(d.tile_h):
-        for lx in range(d.tile_w):
-            if not region_active[ly + r, lx + r]:
-                continue
-            col = ly * d.tile_w + lx
-            src, tgt = sample_block(spec.p_local, N, N)
-            if len(src) == 0:
-                continue
-            exc = src < n_exc
-            w = (np.where(exc, j_exc, j_inh)
-                 * rng.uniform(1.0 - w_jitter, 1.0 + w_jitter, size=len(src)))
-            loc["rows"].append(col * N + src)
-            loc["tgts"].append(col * N + tgt)
-            loc["ws"].append(w)
-            loc["ds"].append(np.ones(len(src), dtype=np.int8))
+    # One batched draw across every active tile column.
+    ly, lx = (g.ravel() for g in np.mgrid[0:d.tile_h, 0:d.tile_w])
+    cols = (ly * d.tile_w + lx)[region_active[ly + r, lx + r]]
+    blk, src, tgt = sample_blocks(rng, spec.p_local, N, N, len(cols))
+    if len(src):
+        col = cols[blk]
+        w = (np.where(src < n_exc, j_exc, j_inh)
+             * rng.uniform(1.0 - w_jitter, 1.0 + w_jitter, size=len(src)))
+        loc["rows"].append(col * N + src)
+        loc["tgts"].append(col * N + tgt)
+        loc["ws"].append(w)
+        loc["ds"].append(np.ones(len(src), dtype=np.int8))
 
     # ---- remote synapses: excitatory sources only -----------------------
+    # Per stencil offset, one batched draw across every target tile
+    # column whose source column is in-region and active.
+    ty, tx = (g.ravel() for g in np.mgrid[0:d.tile_h, 0:d.tile_w])
     for (dy, dx), p, dl in zip(off, probs, delays):
-        for ty in range(d.tile_h):
-            sy = ty + r - dy
-            if not (0 <= sy < d.region_h):
-                continue
-            for tx in range(d.tile_w):
-                sx = tx + r - dx
-                if not (0 <= sx < d.region_w):
-                    continue
-                if not region_active[sy, sx]:
-                    continue
-                src, tgt = sample_block(p, n_exc, N)
-                if len(src) == 0:
-                    continue
-                w = (j_exc * rng.uniform(1.0 - w_jitter, 1.0 + w_jitter,
-                                         size=len(src)))
-                tgt_flat = (ty * d.tile_w + tx) * N + tgt
-                dlv = np.full(len(src), dl, dtype=np.int8)
-                lcol = local_col_of_region[sy, sx]
-                if lcol >= 0:
-                    loc["rows"].append(lcol * N + src)
-                    loc["tgts"].append(tgt_flat)
-                    loc["ws"].append(w)
-                    loc["ds"].append(dlv)
-                else:
-                    rc = sy * d.region_w + sx
-                    bi = band_of_region[rc]
-                    if bi < 0:
-                        continue  # below the 0.5-synapse floor
-                    bcol = bandcol_of_region[rc]
-                    hal[bi]["rows"].append(bcol * n_exc + src)
-                    hal[bi]["tgts"].append(tgt_flat)
-                    hal[bi]["ws"].append(w)
-                    hal[bi]["ds"].append(dlv)
+        sy, sx = ty + r - dy, tx + r - dx
+        ok = (sy >= 0) & (sy < d.region_h) & (sx >= 0) & (sx < d.region_w)
+        ok[ok] &= region_active[sy[ok], sx[ok]]
+        tyv, txv, syv, sxv = ty[ok], tx[ok], sy[ok], sx[ok]
+        blk, src, tgt = sample_blocks(rng, p, n_exc, N, len(tyv))
+        if len(src) == 0:
+            continue
+        w = j_exc * rng.uniform(1.0 - w_jitter, 1.0 + w_jitter,
+                                size=len(src))
+        tgt_flat = (tyv[blk] * d.tile_w + txv[blk]) * N + tgt
+        dlv = np.full(len(src), dl, dtype=np.int8)
+        lcol = local_col_of_region[syv[blk], sxv[blk]]
+        is_local = lcol >= 0
+        if is_local.any():
+            loc["rows"].append(lcol[is_local] * N + src[is_local])
+            loc["tgts"].append(tgt_flat[is_local])
+            loc["ws"].append(w[is_local])
+            loc["ds"].append(dlv[is_local])
+        rc = syv[blk] * d.region_w + sxv[blk]
+        bi = band_of_region[rc]
+        rem = ~is_local & (bi >= 0)   # bi < 0: below the 0.5-synapse floor
+        for b_i in np.unique(bi[rem]):
+            sel = rem & (bi == b_i)
+            hal[b_i]["rows"].append(bandcol_of_region[rc[sel]] * n_exc
+                                    + src[sel])
+            hal[b_i]["tgts"].append(tgt_flat[sel])
+            hal[b_i]["ws"].append(w[sel])
+            hal[b_i]["ds"].append(dlv[sel])
 
     def cat(parts, dtype):
         if not parts:

@@ -3,9 +3,11 @@ oracle in ref.py and a jit'd wrapper in ops.py:
 
   * lif_step        -- fused memory-bound neuron update
   * synaptic_accum  -- fused event-delivery pipeline (the paper's hot
-                       loop): spike compaction -> event gather -> blocked
+                       loop): spike compaction -> event gather ->
+                       lane-packed (E/128, 128) entry blocks -> two-level
                        one-hot MXU scatter-add into the VMEM-resident
-                       delay ring; ``event_delivery_banded`` delivers the
+                       delay ring, with per-(ring-tile, entry-block)
+                       skipping; ``event_delivery_banded`` delivers the
                        local tier plus every halo fan-out band in one
                        launch
   * flash_attention -- blocked online-softmax attention (LM prefill)

@@ -61,11 +61,13 @@ def synaptic_accum_events(tables: dict, spikes_src, i_ring, t_slot,
                           active_cap, interpret=_interpret())
 
 
-def synaptic_accum_banded(tiers, i_ring, t_slot, d_ring: int):
-    """Fused multi-tier (local + halo-band) delivery in one kernel
-    launch per ring tile.  ``tiers``: [(tables, spikes, active_cap)].
-    Returns (ring, n_events, n_dropped) summed over tiers."""
-    return _delivery_banded(tiers, i_ring, t_slot, d_ring,
+def synaptic_accum_banded(tiers, i_ring, t_slot, d_ring: int, plan=None):
+    """Fused multi-tier (local + halo-band) delivery in ONE lane-packed
+    kernel launch across every ring tile.  ``tiers``: [(tables, spikes,
+    active_cap)]; ``plan``: optional ``SynapseTableSpec.delivery_plan()``
+    the tables are validated against.  Returns (ring, n_events,
+    n_dropped) summed over tiers."""
+    return _delivery_banded(tiers, i_ring, t_slot, d_ring, plan=plan,
                             interpret=_interpret())
 
 

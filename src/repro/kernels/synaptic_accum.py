@@ -13,117 +13,162 @@ together themselves.  The TPU shape of the problem:
   * **compaction** (``jnp.nonzero`` with a static ``active_cap``) puts
     the spiking rows first and pads with the all-zero sink row, so the
     valid synapse entries form a prefix of each tier's gathered event
-    list.  The per-block validity mask derived from the spike count is
-    scalar-prefetched, letting the kernel *skip* all-padding blocks with
-    ``pl.when`` -- runtime stays proportional to spikes x fan-out
-    (synaptic events, the paper's cost unit), not to the compaction
-    head-room.
+    list.
   * **gather** streams only the event rows' (tgt, w, dslot) triples out
     of the synapse tables; the flattened entry list is what the kernel
     consumes, so tiers with different row capacities (the geometric halo
     fan-out bands) concatenate into ONE kernel launch per step instead
     of one launch per band.
-  * **scatter-add** runs as a blocked one-hot matmul on the MXU:
-    ``contrib[d, n] = sum_e w[e] * [slot[e] == d] * [tgt[e] == n]``.
-    TPU has no vector scatter; a serialized per-entry RMW loop is
-    byte-accurate but leaves the MXU idle and is orders of magnitude
-    slower under ``interpret=True``.  The one-hot contraction is the
-    classic TPU scatter-as-matmul: (ENTRY_BLOCK, D) x (ENTRY_BLOCK, N)
-    one-hots contracted over the entry axis, accumulated into the
-    VMEM-resident ring block that is revisited across grid steps.
-  * the ring accumulator is tiled ``(D, TILE_N)`` so production tile
-    sizes (n_local ~ 45k) never exceed VMEM; each ring tile stays
-    resident while every entry block streams past it (targets are
-    shifted per tile, so out-of-tile entries match no one-hot column
-    and contribute nothing).
+  * **lane packing**: the flat entry stream is repacked to
+    ``(E / LANES, LANES)`` so each grid step consumes an
+    ``(ENTRY_SUBLANES, LANES)`` block -- ``ENTRY_BLOCK = 4096`` entries
+    with every vector lane live, where the previous layout fed ``(E, 1)``
+    columns that used 1 of 128 lanes.
+  * **scatter-add** runs as a *two-level* one-hot contraction on the
+    MXU.  The target id is factored as ``tgt = i * tile_n + a * LANES +
+    b`` (ring tile, sublane group, lane); the ring tile ``i`` is a grid
+    dimension, and within a tile the contribution is
+
+        out[d, a * LANES + b] = sum_e w[e] * [slot[e] == d]
+                                           * [hi[e] == a] * [lo[e] == b]
+
+    computed as one ``(blk, R) x (blk, LANES)`` matmul with
+    ``R = d_ring * tile_n / LANES``: the left factor one-hots the fused
+    (slot, sublane-group) row id, the right factor carries ``w`` through
+    a lane one-hot.  That shrinks the per-block one-hot footprint from
+    ``(blk, TILE_N)`` (8 MiB at the old sizes) to two ``(blk, 128)``-ish
+    factors while keeping the same per-entry MXU flops.
+  * **block skipping** is per (ring tile, entry block): scalar-prefetched
+    per-block [first, last] target-tile windows (min/max of the live
+    ``w != 0`` entries) let ``pl.when`` skip a block on every tile it
+    does not touch -- all-padding blocks carry an empty window and are
+    skipped everywhere, so runtime stays proportional to spikes x
+    fan-out (synaptic events, the paper's cost unit) and a block whose
+    targets live in ring tile 0 is no longer streamed through every
+    other tile.
+  * the grid is 2-D ``(n_tiles, n_blocks)`` with the entry-block
+    dimension innermost: each ``(d_ring, tile_n)`` ring tile stays
+    VMEM-resident while every entry block streams past it (the former
+    host-level per-tile ``dynamic_slice`` loop is gone).
 
 Interpret mode (CPU) executes the identical BlockSpec tiling and kernel
 body with jnp ops, so tests exercise the same code path that compiles
-on TPU.
+on TPU.  (TPU-hardware validation of the lane-packed layout is a
+ROADMAP item; the in-kernel ``(S, L) -> (S*L, 1)`` relayouts are the
+part Mosaic is most likely to want reworked.)
 """
 
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# Sized so the per-block one-hot target matrix -- the largest kernel
-# intermediate, (ENTRY_BLOCK, TILE_N) f32 = 8 MiB -- plus its bool
-# precursor (2 MiB), the resident ring tile and the entry blocks stay
-# inside a ~16 MiB VMEM core.
-ENTRY_BLOCK = 1024        # synapse entries per grid step (sublane dim)
-TILE_N = 2048             # max ring-tile width (lane dim, multiple of 128)
-LANES = 128
+LANES = 128               # vector lane width: packed entry minor dim
+ENTRY_SUBLANES = 32       # sublanes per entry block
+ENTRY_BLOCK = ENTRY_SUBLANES * LANES   # synapse entries per grid step
+TILE_N = 4096             # max ring-tile width (lane dim, multiple of 128)
+
+# Sized so the largest kernel intermediates -- the (ENTRY_BLOCK, R) one-
+# hot row factor (4 MiB f32 at d_ring=8 / TILE_N=4096, R = d_ring *
+# TILE_N / LANES = 256) and the (ENTRY_BLOCK, LANES) lane factor
+# (2 MiB) -- plus their bool precursors, the resident ring tile and the
+# entry blocks stay inside a ~16 MiB VMEM core.  (CPU-interpret sweep
+# at the committed 8x8x60 benchmark: {SUB=32,TN=2048}: 7.3/12.1 s per
+# 60 steps gaussian/exponential, {64,2048}: 4.9/6.9, {32,4096}:
+# 3.5/5.7, {64,4096}: 2.6/3.7 but ~18 MiB of intermediates -- {32,4096}
+# is the best point that still fits compiled VMEM.)
+
+_FAR = 2 ** 30            # min-reduction sentinel for non-live entries
 
 
 def _ceil_to(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def _accum_kernel(meta_ref, blkmask_ref, tgt_ref, w_ref, d_ref,
+def packed_total(entries: int) -> int:
+    """Total padded length of a lane-packed entry stream holding
+    ``entries`` entries -- the single source of truth for the launch's
+    block count, shared with ``SynapseTableSpec.entry_geometry()``."""
+    return _ceil_to(max(entries, ENTRY_BLOCK), ENTRY_BLOCK)
+
+
+def _accum_kernel(meta_ref, tmin_ref, tmax_ref, tgt_ref, w_ref, d_ref,
                   ring_ref, out_ref):
-    """One entry-block grid step of the fused scatter-add.
+    """One (ring-tile, entry-block) grid step of the two-level scatter.
 
     meta_ref:    scalar prefetch [t_slot]
-    blkmask_ref: scalar prefetch (n_entry_blocks,) -- 1 where the block
-                 overlaps valid (non-padding) entries
-    tgt/w/d:     (ENTRY_BLOCK, 1) flattened gathered synapse entries,
-                 targets already shifted into this ring tile's frame
-    ring/out:    (d_ring, tile_n) -- the revisited accumulator tile
+    tmin/tmax:   scalar prefetch (n_entry_blocks,) -- first/last ring
+                 tile targeted by the block's live (w != 0) entries;
+                 all-padding blocks carry an empty window (tmin > tmax)
+    tgt/w/d:     (ENTRY_SUBLANES, LANES) lane-packed entry block
+    ring/out:    (d_ring, tile_n) -- the accumulator tile, resident
+                 across the inner (entry-block) grid dimension
     """
-    e = pl.program_id(0)
+    i = pl.program_id(0)              # ring tile
+    e = pl.program_id(1)              # entry block
 
     @pl.when(e == 0)
     def _init():
         out_ref[...] = ring_ref[...]
 
-    @pl.when(blkmask_ref[e] > 0)
+    @pl.when(jnp.logical_and(tmin_ref[e] <= i, i <= tmax_ref[e]))
     def _accum():
         d_ring, tile_n = out_ref.shape
-        blk = tgt_ref.shape[0]
+        n_hi = tile_n // LANES
+        blk = tgt_ref.shape[0] * tgt_ref.shape[1]
         t0 = meta_ref[0]
-        slots = (t0 + d_ref[...]) % d_ring                    # (blk, 1)
-        oh_slot = slots == jax.lax.broadcasted_iota(
-            jnp.int32, (blk, d_ring), 1)
-        oh_tgt = tgt_ref[...] == jax.lax.broadcasted_iota(
-            jnp.int32, (blk, tile_n), 1)
-        wslot = jnp.where(oh_slot, w_ref[...].astype(jnp.float32), 0.0)
+        tgt = tgt_ref[...].reshape(blk, 1) - i * tile_n   # this tile's frame
+        w = w_ref[...].reshape(blk, 1).astype(jnp.float32)
+        slots = (t0 + d_ref[...].reshape(blk, 1)) % d_ring
+        # Out-of-tile entries must be zeroed through w: their fused row
+        # id below may alias a live (slot, hi) pair, and a zero weight
+        # is the one thing that is harmless under aliasing.
+        in_tile = jnp.logical_and(tgt >= 0, tgt < tile_n)
+        w = jnp.where(in_tile, w, 0.0)
+        hi = jnp.floor_divide(tgt, LANES)                 # sublane group
+        lo = tgt - hi * LANES                             # lane
+        rid = slots * n_hi + hi                           # fused (slot, hi)
+        oh_row = rid == jax.lax.broadcasted_iota(
+            jnp.int32, (blk, d_ring * n_hi), 1)
+        oh_lane = lo == jax.lax.broadcasted_iota(
+            jnp.int32, (blk, LANES), 1)
         contrib = jax.lax.dot_general(
-            wslot, oh_tgt.astype(jnp.float32),
+            oh_row.astype(jnp.float32), jnp.where(oh_lane, w, 0.0),
             dimension_numbers=(((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        out_ref[...] += contrib
+            preferred_element_type=jnp.float32)           # (R, LANES)
+        # (d * n_hi + a, b) -> (d, a * LANES + b): row-major reshape.
+        out_ref[...] += contrib.reshape(d_ring, tile_n)
 
 
-def _scatter_tile(meta, blk_mask, tgt_t, w_e, d_e, tile, *,
-                  interpret: bool):
-    """Run the entry-block grid against one resident ring tile."""
-    d_ring, tile_n = tile.shape
-    n_blocks = tgt_t.shape[0] // ENTRY_BLOCK
-    entry_spec = pl.BlockSpec((ENTRY_BLOCK, 1), lambda e, m, bm: (e, 0))
-    ring_spec = pl.BlockSpec((d_ring, tile_n), lambda e, m, bm: (0, 0))
-    gspec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2, grid=(n_blocks,),
-        in_specs=[entry_spec, entry_spec, entry_spec, ring_spec],
-        out_specs=ring_spec)
-    return pl.pallas_call(
-        _accum_kernel,
-        grid_spec=gspec,
-        out_shape=jax.ShapeDtypeStruct((d_ring, tile_n), jnp.float32),
-        interpret=interpret,
-    )(meta, blk_mask, tgt_t, w_e, d_e, tile)
+def _block_tile_windows(tgt_e, w_e, tile_n: int):
+    """Per-entry-block [first, last] ring-tile windows over live entries.
+
+    Live means ``w != 0``: gathered padding (sink rows, intra-row cap
+    padding, lane/block padding) all carry zero weights, and a zero
+    weight contributes exactly nothing to the scatter, so excluding it
+    from the window is semantically free.  All-padding blocks come back
+    with tmin > tmax and are skipped on every tile.
+    """
+    n_blocks = tgt_e.shape[0] // ENTRY_BLOCK
+    tgt_b = tgt_e.reshape(n_blocks, ENTRY_BLOCK)
+    live = w_e.reshape(n_blocks, ENTRY_BLOCK) != 0.0
+    tmin = jnp.min(jnp.where(live, tgt_b, _FAR), axis=1) // tile_n
+    tmax = jnp.max(jnp.where(live, tgt_b, -1), axis=1) // tile_n
+    return tmin.astype(jnp.int32), tmax.astype(jnp.int32)
 
 
-def _scatter_entries(tgt_e, w_e, d_e, blk_mask, ring, t_slot, *,
+def _scatter_entries(tgt_e, w_e, d_e, ring, t_slot, *,
                      interpret: bool):
-    """Blocked scatter of flat entry lists into the (tiled) ring.
+    """Two-level blocked scatter of a lane-packed entry stream into the
+    tiled ring.
 
-    tgt_e/w_e/d_e: (E, 1) with E a multiple of ENTRY_BLOCK; padding
-    entries must carry w == 0.  ``blk_mask``: (E // ENTRY_BLOCK,) int32.
+    tgt_e/w_e/d_e: flat (E,) with E a multiple of ENTRY_BLOCK; padding
+    entries must carry w == 0.  One pallas_call covers every
+    (ring tile, entry block) pair on a 2-D grid.
     """
     d_ring, n_local = ring.shape
     n_pad = _ceil_to(max(n_local, LANES), LANES)
@@ -131,15 +176,28 @@ def _scatter_entries(tgt_e, w_e, d_e, blk_mask, ring, t_slot, *,
     n_tiles = -(-n_pad // tile_n)
     n_pad = n_tiles * tile_n
     ring_p = jnp.pad(ring, ((0, 0), (0, n_pad - n_local)))
+    tmin, tmax = _block_tile_windows(tgt_e, w_e, tile_n)
     meta = jnp.asarray([t_slot], jnp.int32).reshape(1)
-    out = ring_p
-    for i in range(n_tiles):
-        tile = jax.lax.dynamic_slice(out, (0, i * tile_n),
-                                     (d_ring, tile_n))
-        new_tile = _scatter_tile(meta, blk_mask,
-                                 tgt_e - jnp.int32(i * tile_n),
-                                 w_e, d_e, tile, interpret=interpret)
-        out = jax.lax.dynamic_update_slice(out, new_tile, (0, i * tile_n))
+    n_blocks = tgt_e.shape[0] // ENTRY_BLOCK
+
+    def packed(x, dt):
+        return x.astype(dt).reshape(-1, LANES)
+
+    entry_spec = pl.BlockSpec((ENTRY_SUBLANES, LANES),
+                              lambda i, e, m, lo, hi: (e, 0))
+    ring_spec = pl.BlockSpec((d_ring, tile_n),
+                             lambda i, e, m, lo, hi: (0, i))
+    gspec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3, grid=(n_tiles, n_blocks),
+        in_specs=[entry_spec, entry_spec, entry_spec, ring_spec],
+        out_specs=ring_spec)
+    out = pl.pallas_call(
+        _accum_kernel,
+        grid_spec=gspec,
+        out_shape=jax.ShapeDtypeStruct((d_ring, n_pad), jnp.float32),
+        interpret=interpret,
+    )(meta, tmin, tmax, packed(tgt_e, jnp.int32), packed(w_e, jnp.float32),
+      packed(d_e, jnp.int32), ring_p)
     return out[:, :n_local]
 
 
@@ -160,19 +218,24 @@ def compact_events(spikes_src, n_rows: int, active_cap: int):
 
 
 # ---------------------------------------------------------------------------
-# Stage 2+3: gather event rows and flatten to entry lists
+# Stage 2+3: gather event rows and flatten to entry streams
 # ---------------------------------------------------------------------------
 
 def _gather_entries(tables: dict, idx):
-    """Gather event rows and flatten to (A * cap, 1) entry columns."""
+    """Gather event rows and flatten row-major to (A * cap,) streams."""
     rows_t = tables["tgt"][idx]
     rows_w = tables["w"][idx].astype(jnp.float32)
     rows_d = tables["dslot"][idx].astype(jnp.int32)
+    return rows_t.astype(jnp.int32).ravel(), rows_w.ravel(), rows_d.ravel()
 
-    def flat(x):
-        return x.reshape(-1, 1)
 
-    return flat(rows_t.astype(jnp.int32)), flat(rows_w), flat(rows_d)
+def _pad_flat(te, we, de, n: int):
+    pad = n - te.shape[0]
+    if pad:
+        te = jnp.pad(te, (0, pad))
+        we = jnp.pad(we, (0, pad))
+        de = jnp.pad(de, (0, pad))
+    return te, we, de
 
 
 # ---------------------------------------------------------------------------
@@ -192,61 +255,60 @@ def event_delivery(tables: dict, spikes_src, i_ring, t_slot,
 
 def event_delivery_banded(tiers: Sequence[Tuple[dict, jnp.ndarray, int]],
                           i_ring, t_slot, d_ring: int, *,
+                          plan: Optional[Sequence[dict]] = None,
                           interpret: bool = True):
-    """Fused multi-tier delivery: ONE kernel launch (per ring tile) for
-    the local table plus every halo fan-out band.
+    """Fused multi-tier delivery: ONE kernel launch for the local table
+    plus every halo fan-out band across every ring tile.
 
     ``tiers``: sequence of (tables, spikes_src, active_cap); each tier's
     tables may have a different row capacity (the banded-halo layout) --
     entry flattening makes the concatenation capacity-agnostic.
+    ``plan``: optional per-tier sizing from
+    ``SynapseTableSpec.delivery_plan()``; when given, the tables are
+    validated against it (the spec contract the engines compile
+    against) and its lane-padded ``entries_padded`` sizes the per-tier
+    slice of the packed entry stream.
     Returns (ring, n_events, n_dropped) summed over tiers.
     """
     assert i_ring.shape[0] == d_ring
+    if plan is not None and len(plan) != len(tiers):
+        raise ValueError(f"delivery plan has {len(plan)} tiers, "
+                         f"got {len(tiers)}")
     parts_t: List[jnp.ndarray] = []
     parts_w: List[jnp.ndarray] = []
     parts_d: List[jnp.ndarray] = []
-    spans = []                 # (offset, cap, valid_rows) per tier
     n_events = jnp.zeros((), jnp.int32)
     n_dropped = jnp.zeros((), jnp.int32)
-    offset = 0
-    for tables, spikes_src, active_cap in tiers:
+    for ti, (tables, spikes_src, active_cap) in enumerate(tiers):
         n_rows, cap = tables["tgt"].shape[0] - 1, tables["tgt"].shape[1]
+        if plan is not None:
+            p = plan[ti]
+            if (p["rows"], p["cap"], p["active_cap"]) != (n_rows, cap,
+                                                          active_cap):
+                raise ValueError(
+                    f"tier {ti} does not match its delivery plan: tables "
+                    f"are rows={n_rows} cap={cap} active_cap={active_cap}, "
+                    f"plan says rows={p['rows']} cap={p['cap']} "
+                    f"active_cap={p['active_cap']}")
         idx, n_spk = compact_events(spikes_src, n_rows, active_cap)
         te, we, de = _gather_entries(tables, idx)
+        e_pad = (plan[ti]["entries_padded"] if plan is not None
+                 else _ceil_to(te.shape[0], LANES))
+        te, we, de = _pad_flat(te, we, de, e_pad)
         parts_t.append(te)
         parts_w.append(we)
         parts_d.append(de)
-        valid_rows = jnp.minimum(n_spk.astype(jnp.int32),
-                                 jnp.int32(active_cap))
-        spans.append((offset, cap, valid_rows))
-        offset += te.shape[0]
         n_events = n_events + jnp.sum(tables["nnz"][idx]).astype(jnp.int32)
         n_dropped = n_dropped + jnp.maximum(
             n_spk - active_cap, 0).astype(jnp.int32)
 
-    e_tot = _ceil_to(max(offset, ENTRY_BLOCK), ENTRY_BLOCK)
-    pad = e_tot - offset
     tgt_e = jnp.concatenate(parts_t)
     w_e = jnp.concatenate(parts_w)
     d_e = jnp.concatenate(parts_d)
-    if pad:
-        tgt_e = jnp.pad(tgt_e, ((0, pad), (0, 0)))
-        w_e = jnp.pad(w_e, ((0, pad), (0, 0)))
-        d_e = jnp.pad(d_e, ((0, pad), (0, 0)))
-
-    # Valid-entry ranges: tier t occupies [off, off + valid_rows * cap).
-    # A block participates iff it overlaps any tier's range; all-padding
-    # blocks are skipped in-kernel (runtime ~ synaptic events).
-    n_blocks = e_tot // ENTRY_BLOCK
-    starts = jnp.arange(n_blocks, dtype=jnp.int32) * ENTRY_BLOCK
-    ends = starts + ENTRY_BLOCK
-    mask = jnp.zeros((n_blocks,), jnp.bool_)
-    for off, cap, valid_rows in spans:
-        hi = jnp.int32(off) + valid_rows * jnp.int32(cap)
-        mask = mask | ((starts < hi) & (ends > off))
-
-    ring = _scatter_entries(tgt_e, w_e, d_e, mask.astype(jnp.int32),
-                            i_ring, t_slot, interpret=interpret)
+    tgt_e, w_e, d_e = _pad_flat(tgt_e, w_e, d_e,
+                                packed_total(tgt_e.shape[0]))
+    ring = _scatter_entries(tgt_e, w_e, d_e, i_ring, t_slot,
+                            interpret=interpret)
     return ring, n_events, n_dropped
 
 
@@ -260,18 +322,11 @@ def synaptic_accum_pallas(idx, t_slot, tgt, w, dslot, ring, *,
 
     Equivalent to ``ref.synaptic_accum_ref``.  ``dslot`` int8/int32;
     ``ring`` (D, n_local) f32 -- returned updated.  Unlike
-    ``event_delivery`` this takes a pre-compacted index list and cannot
-    skip padding blocks (callers may pass arbitrary, unsorted indices).
+    ``event_delivery`` this takes a pre-compacted index list; callers
+    may pass arbitrary, unsorted indices -- block skipping is purely
+    data-driven (live-entry tile windows), so it still applies.
     """
     tables = {"tgt": tgt, "w": w, "dslot": dslot}
     te, we, de = _gather_entries(tables, idx.astype(jnp.int32))
-    offset = te.shape[0]
-    e_tot = _ceil_to(max(offset, ENTRY_BLOCK), ENTRY_BLOCK)
-    pad = e_tot - offset
-    if pad:
-        te = jnp.pad(te, ((0, pad), (0, 0)))
-        we = jnp.pad(we, ((0, pad), (0, 0)))
-        de = jnp.pad(de, ((0, pad), (0, 0)))
-    mask = jnp.ones((e_tot // ENTRY_BLOCK,), jnp.int32)
-    return _scatter_entries(te, we, de, mask, ring, t_slot,
-                            interpret=interpret)
+    te, we, de = _pad_flat(te, we, de, packed_total(te.shape[0]))
+    return _scatter_entries(te, we, de, ring, t_slot, interpret=interpret)

@@ -86,11 +86,13 @@ class SimDriver(FaultTolerantLoop):
 
     # ---- checkpoint metadata (identity of the saved state) ------------
     def _meta(self) -> dict:
+        from ..core.synapses import TABLE_REALIZATION_VERSION
         e = self.dist_cfg.engine
         d = e.decomp
         return {"tiles_y": d.tiles_y, "tiles_x": d.tiles_x,
                 "grid": [d.grid.height, d.grid.width, d.grid.n_per_column],
                 "law": e.law.kind, "radius": d.radius, "seed": e.seed,
+                "table_realization": TABLE_REALIZATION_VERSION,
                 "segment_steps": self.step_size}
 
     def _save(self, step: int, state):
@@ -110,8 +112,11 @@ class SimDriver(FaultTolerantLoop):
         meta = checkpoint_meta(self.cfg.ckpt_dir, last)
         mine = self._meta()
         # the state relayout is only valid for the *same model*: grid,
-        # connectivity law and synapse seed must match the checkpoint
-        for key in ("grid", "law", "radius", "seed"):
+        # connectivity law, synapse seed AND sampling-procedure version
+        # must match -- same seed under a different table_realization
+        # rebuilds a different network (keys absent from older
+        # checkpoints are skipped: pre-versioning manifests)
+        for key in ("grid", "law", "radius", "seed", "table_realization"):
             if key in meta and meta[key] != mine[key]:
                 raise ValueError(
                     f"checkpoint in {self.cfg.ckpt_dir} was written with "

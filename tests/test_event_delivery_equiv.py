@@ -15,8 +15,10 @@ from repro.core.engine import (EngineConfig, build_shard_tables,
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.synapses import SynapseTableSpec, build_tables, deliver_events
 from repro.kernels import ref
-from repro.kernels.synaptic_accum import (compact_events, event_delivery,
-                                          event_delivery_banded)
+from repro.kernels.synaptic_accum import (ENTRY_BLOCK, LANES,
+                                          compact_events, event_delivery,
+                                          event_delivery_banded,
+                                          synaptic_accum_pallas)
 
 
 def _dist_spec(law, grid=8, n_per_col=12, tiles=(4, 2)):
@@ -154,3 +156,128 @@ def test_delivery_plan_shapes():
     for p, tab in zip(plan, tiers):
         assert tab["tgt"].shape == (p["rows"] + 1, p["cap"])
         assert p["active_cap"] <= p["rows"] + 1
+        assert p["entries"] == p["active_cap"] * p["cap"]
+        assert p["entries_padded"] >= p["entries"]
+        assert p["entries_padded"] % LANES == 0
+
+
+def test_entry_geometry_contract():
+    """The spec's lane-packed launch geometry is consistent with its
+    per-tier plan and with the kernel layout constants."""
+    spec = _dist_spec(exponential_law())
+    plan = spec.delivery_plan()
+    geo = spec.entry_geometry()
+    assert geo["lanes"] == LANES and geo["entry_block"] == ENTRY_BLOCK
+    assert geo["entries"] == sum(p["entries_padded"] for p in plan)
+    assert geo["entries_padded"] % ENTRY_BLOCK == 0
+    assert geo["entries_padded"] >= max(geo["entries"], ENTRY_BLOCK)
+    assert geo["n_blocks"] == geo["entries_padded"] // ENTRY_BLOCK
+    assert geo["packed_shape"] == (geo["entries_padded"] // LANES, LANES)
+
+
+def test_plan_mismatch_is_rejected(rng):
+    """A tier that does not match its delivery plan fails loudly (the
+    plan is the spec contract the engines compile against)."""
+    spec = _single_spec(gaussian_law(), n_per_col=12)
+    tabs = build_tables(spec, 0, 0, j_exc=0.4, j_inh=-2.0, seed=0)
+    ring0 = jnp.zeros((spec.d_ring, spec.n_local), jnp.float32)
+    tiers = [(tabs["local"], jnp.zeros(spec.n_local),
+              spec.active_cap_local)]
+    plan = spec.delivery_plan()
+    bad = [dict(plan[0], cap=plan[0]["cap"] + 1)]
+    with pytest.raises(ValueError, match="does not match"):
+        event_delivery_banded(tiers, ring0, 0, spec.d_ring, plan=bad,
+                              interpret=True)
+    with pytest.raises(ValueError, match="plan has"):
+        event_delivery_banded(tiers, ring0, 0, spec.d_ring,
+                              plan=plan + plan, interpret=True)
+    # and the matching plan goes through the lane-packed kernel cleanly
+    ring_k, _, _ = jax.jit(
+        lambda r: event_delivery_banded(tiers, r, 0, spec.d_ring,
+                                        plan=plan, interpret=True))(ring0)
+    np.testing.assert_array_equal(np.asarray(ring_k), np.asarray(ring0))
+
+
+# ---------------------------------------------------------------------------
+# Lane-packed layout edge cases: ragged n_local / partial entry blocks
+# ---------------------------------------------------------------------------
+
+def _single_spec(law, grid=5, n_per_col=9, rate_cap=25.0):
+    d = TileDecomposition(grid=ColumnGrid(grid, grid, n_per_col),
+                          tiles_y=1, tiles_x=1, radius=law.radius)
+    return SynapseTableSpec(decomp=d, law=law, rate_cap_hz=rate_cap,
+                            single_shard=True)
+
+
+@pytest.mark.parametrize("grid,n_per_col", [
+    (5, 9),     # n_local = 225: not a multiple of LANES (128)
+    (10, 45),   # n_local = 4500: > TILE_N and not a multiple of it
+])
+def test_ragged_n_local_matches_xla_and_ref(grid, n_per_col, rng):
+    """n_local that fills neither the lane dim nor the ring tiling:
+    kernel vs deliver_events vs the jnp oracle, random initial ring."""
+    law = gaussian_law()
+    spec = _single_spec(law, grid=grid, n_per_col=n_per_col)
+    tabs = build_tables(spec, 0, 0, j_exc=0.4, j_inh=-2.0, seed=5)
+    spikes = jnp.asarray(
+        (rng.random(spec.n_local) < 0.08).astype(np.float32))
+    ring0 = jnp.asarray(rng.normal(size=(spec.d_ring, spec.n_local)),
+                        jnp.float32)
+    cap = spec.active_cap_local
+    r_k, e_k, d_k = jax.jit(
+        lambda r: event_delivery(tabs["local"], spikes, r, 3, spec.d_ring,
+                                 cap, interpret=True))(ring0)
+    r_x, e_x, d_x = deliver_events(tabs["local"], spikes, ring0, 3,
+                                   spec.d_ring, cap)
+    idx, _ = compact_events(spikes, spec.n_local, cap)
+    r_r = ref.synaptic_accum_ref(idx, 3, tabs["local"]["tgt"],
+                                 tabs["local"]["w"],
+                                 tabs["local"]["dslot"], ring0)
+    np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_x),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_r),
+                               rtol=1e-5, atol=1e-5)
+    assert int(e_k) == int(e_x) and int(d_k) == int(d_x) == 0
+
+
+def test_active_cap_overflow_drops_like_xla(rng):
+    """More spiking rows than the event list holds: the kernel delivers
+    the same truncated prefix as the XLA path and reports the same
+    drop count."""
+    law = gaussian_law()
+    spec = _single_spec(law)
+    tabs = build_tables(spec, 0, 0, j_exc=0.4, j_inh=-2.0, seed=7)
+    spikes = jnp.asarray(
+        (rng.random(spec.n_local) < 0.5).astype(np.float32))
+    n_spk = int(np.asarray(spikes).sum())
+    cap = max(n_spk // 3, 1)           # force overflow
+    assert n_spk > cap
+    ring0 = jnp.asarray(rng.normal(size=(spec.d_ring, spec.n_local)),
+                        jnp.float32)
+    r_k, e_k, d_k = jax.jit(
+        lambda r: event_delivery(tabs["local"], spikes, r, 1, spec.d_ring,
+                                 cap, interpret=True))(ring0)
+    r_x, e_x, d_x = deliver_events(tabs["local"], spikes, ring0, 1,
+                                   spec.d_ring, cap)
+    np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_x),
+                               rtol=1e-5, atol=1e-5)
+    assert int(d_k) == int(d_x) == n_spk - cap
+    assert int(e_k) == int(e_x)
+
+
+def test_partial_last_block_and_lane(rng):
+    """Entry counts that fill neither the last lane (E % 128 != 0) nor
+    the last lane-packed block (E % ENTRY_BLOCK != 0) deliver exactly;
+    the trailing padding is skipped, not scattered."""
+    rows, cap, d_ring, n_local = 11, 7, 4, 150
+    assert (rows + 1) * cap % LANES != 0
+    tgt = jnp.asarray(rng.integers(0, n_local, (rows + 1, cap)), jnp.int32)
+    w = jnp.asarray(rng.normal(size=(rows + 1, cap)), jnp.float32)
+    w = w.at[-1].set(0)
+    ds = jnp.asarray(rng.integers(0, d_ring, (rows + 1, cap)), jnp.int8)
+    ring = jnp.asarray(rng.normal(size=(d_ring, n_local)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, rows + 1, 5), jnp.int32)
+    got = synaptic_accum_pallas(idx, 2, tgt, w, ds, ring)
+    want = ref.synaptic_accum_ref(idx, 2, tgt, w, ds, ring)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

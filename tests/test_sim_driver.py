@@ -176,6 +176,19 @@ def test_resume_refuses_seed_or_law_drift(tmp_path):
         d._restore_or_init()
 
 
+def test_resume_refuses_table_realization_drift(tmp_path, monkeypatch):
+    """Same seed under a different table-sampling-procedure version
+    rebuilds a different network realization: a resume across that
+    boundary must be refused, not silently continued."""
+    import repro.core.synapses as syn
+    _driver(tmp_path, seg=10).run(10)
+    monkeypatch.setattr(syn, "TABLE_REALIZATION_VERSION",
+                        syn.TABLE_REALIZATION_VERSION + 1)
+    d = _driver(tmp_path, seg=10)
+    with pytest.raises(ValueError, match="table_realization"):
+        d._restore_or_init()
+
+
 def test_checkpoint_meta_rides_inside_checkpoint(tmp_path):
     """Tiling/model meta is stored in the step's own manifest (atomic
     with the checkpoint), not a sidecar that can skew on crash."""
