@@ -132,38 +132,41 @@ def restore_checkpoint(directory: str, step: int, like,
     return tree
 
 
-class AsyncCheckpointer:
-    """Daemon-thread writer; ``save`` returns once the host snapshot is
-    taken.  ``wait()`` drains pending writes (call before exit)."""
+class AsyncWriterThread:
+    """Daemon-thread work queue with deferred error surfacing.
 
-    def __init__(self, directory: str, keep: int = 3):
-        self.directory = directory
-        self.keep = keep
+    Shared writer machinery for everything that must stay off the hot
+    path (checkpoints, spike-log spooling): ``_submit`` enqueues, the
+    daemon thread calls ``_write(item)``, a failing write is latched and
+    re-raised on the next ``_submit``/``wait`` (never swallowed),
+    ``wait()`` drains pending work, ``close()`` shuts the thread down.
+    """
+
+    def __init__(self):
         self._q: "queue.Queue" = queue.Queue()
         self._err: Optional[BaseException] = None
         self._t = threading.Thread(target=self._worker, daemon=True)
         self._t.start()
+
+    def _write(self, item):
+        raise NotImplementedError
 
     def _worker(self):
         while True:
             item = self._q.get()
             if item is None:
                 return
-            step, tree, meta = item
             try:
-                save_checkpoint(self.directory, step, tree, self.keep,
-                                meta=meta)
-            except BaseException as e:   # surfaced on next save/wait
+                self._write(item)
+            except BaseException as e:   # surfaced on next submit/wait
                 self._err = e
             finally:
                 self._q.task_done()
 
-    def save(self, step: int, tree, meta: Optional[dict] = None):
+    def _submit(self, item):
         if self._err:
             raise self._err
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
-                                 tree)
-        self._q.put((step, host_tree, meta))
+        self._q.put(item)
 
     def wait(self):
         self._q.join()
@@ -174,3 +177,22 @@ class AsyncCheckpointer:
         self.wait()
         self._q.put(None)
         self._t.join()
+
+
+class AsyncCheckpointer(AsyncWriterThread):
+    """Daemon-thread writer; ``save`` returns once the host snapshot is
+    taken.  ``wait()`` drains pending writes (call before exit)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        super().__init__()
+
+    def _write(self, item):
+        step, tree, meta = item
+        save_checkpoint(self.directory, step, tree, self.keep, meta=meta)
+
+    def save(self, step: int, tree, meta: Optional[dict] = None):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._submit((step, host_tree, meta))

@@ -151,7 +151,7 @@ def dist_shardings(cfg: DistConfig, mesh: Mesh):
 # ---------------------------------------------------------------------------
 
 def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
-                record_rate: bool = True):
+                record_rate: bool = True, recorder=None):
     """Build the jitted multi-shard simulation function.
 
     Returns ``sim(state, tables) -> (state, per_step_spikes (TY,TX,S))``.
@@ -166,6 +166,17 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
     seamlessly where the last segment stopped (this is the segmented
     pattern ``runtime.sim_driver.SimDriver`` drives, with checkpoints
     between segments).
+
+    ``recorder``: optional ``obs.record.RecorderSpec``.  When given the
+    signature becomes ``sim(state, tables, gids) -> (state, per_step,
+    recorder_state)`` -- ``gids`` is the stacked ``(TY, TX, n_local+1)``
+    global-neuron-id map (``obs.record.stacked_gid_maps``) and
+    ``recorder_state`` holds each shard's per-segment ``(step, gid)``
+    event buffer, valid-prefix ``count`` and overflow ``dropped``
+    counter, freshly zeroed at the start of every call (the host spooler
+    drains it between segments).  Recording is a pure observer of the
+    spike vector: dynamics and ``per_step`` outputs are bit-identical
+    with or without it.
     """
     e = cfg.engine
     spec = e.spec()
@@ -227,18 +238,7 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
                         "events": m["events"] + ev,
                         "dropped": m["dropped"] + dr},
         }
-        return new_state, jnp.sum(spikes)
-
-    def shard_body(state_blk, tables_blk):
-        state = jax.tree.map(lambda a: a[0, 0], state_blk)
-        tables = jax.tree.map(lambda a: a[0, 0], tables_blk)
-
-        def body(carry, _):
-            return shard_step(carry, tables)
-
-        state, per_step = jax.lax.scan(body, state, None, length=n_steps)
-        state = jax.tree.map(lambda a: a[None, None], state)
-        return state, per_step[None, None] if record_rate else None
+        return new_state, spikes
 
     state_sp = jax.tree.map(
         lambda leaf: cfg.pspec(len(leaf.shape) - 2),
@@ -246,9 +246,53 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
     table_sp = jax.tree.map(
         lambda leaf: cfg.pspec(len(leaf.shape) - 2),
         abstract_dist_inputs(cfg)[1])
-    out_sp = (state_sp, cfg.pspec(1) if record_rate else None)
 
     from ..parallel.compat import shard_map
+
+    if recorder is not None:
+        from ..obs.record import init_recorder_state, record_step
+
+        def shard_body_rec(state_blk, tables_blk, gids_blk):
+            state = jax.tree.map(lambda a: a[0, 0], state_blk)
+            tables = jax.tree.map(lambda a: a[0, 0], tables_blk)
+            gids = gids_blk[0, 0]
+
+            def body(carry, _):
+                st, rec = carry
+                new_state, spikes = shard_step(st, tables)
+                rec = record_step(rec, spikes, gids, st["t"], recorder)
+                return (new_state, rec), jnp.sum(spikes)
+
+            (state, rec), per_step = jax.lax.scan(
+                body, (state, init_recorder_state(recorder)), None,
+                length=n_steps)
+            lift = lambda a: a[None, None]                      # noqa: E731
+            return (jax.tree.map(lift, state),
+                    per_step[None, None] if record_rate else None,
+                    jax.tree.map(lift, rec))
+
+        rec_sp = jax.tree.map(lambda leaf: cfg.pspec(leaf.ndim),
+                              init_recorder_state(recorder))
+        mapped = shard_map(
+            shard_body_rec, mesh=mesh,
+            in_specs=(state_sp, table_sp, cfg.pspec(1)),
+            out_specs=(state_sp, cfg.pspec(1) if record_rate else None,
+                       rec_sp))
+        return jax.jit(mapped, donate_argnums=(0,))
+
+    def shard_body(state_blk, tables_blk):
+        state = jax.tree.map(lambda a: a[0, 0], state_blk)
+        tables = jax.tree.map(lambda a: a[0, 0], tables_blk)
+
+        def body(carry, _):
+            st, spikes = shard_step(carry, tables)
+            return st, jnp.sum(spikes)
+
+        state, per_step = jax.lax.scan(body, state, None, length=n_steps)
+        state = jax.tree.map(lambda a: a[None, None], state)
+        return state, per_step[None, None] if record_rate else None
+
+    out_sp = (state_sp, cfg.pspec(1) if record_rate else None)
     mapped = shard_map(shard_body, mesh=mesh,
                        in_specs=(state_sp, table_sp),
                        out_specs=out_sp)

@@ -208,8 +208,31 @@ def step(state: dict, tables: dict, cfg: EngineConfig,
 
 
 def run(state: dict, tables: dict, cfg: EngineConfig, n_steps: int,
-        record_spikes: bool = False):
-    """Scan ``n_steps`` of single-shard simulation (no halo sources)."""
+        record_spikes: bool = False, recorder=None):
+    """Scan ``n_steps`` of single-shard simulation (no halo sources).
+
+    ``recorder``: optional ``obs.record.RecorderSpec`` -- when given,
+    every spike is also appended as a ``(sim_step, global_neuron_id)``
+    event to a bounded buffer carried through the scan, and the return
+    becomes ``(state, out, recorder_state)``.  Recording is a pure
+    observer: the spike trains are bit-identical with it on or off.
+    """
+    if recorder is not None:
+        from ..obs.record import (init_recorder_state, record_step,
+                                  tile_gid_map)
+        gids = jnp.asarray(tile_gid_map(cfg.decomp, 0, 0))
+
+        def body_rec(carry, _):
+            st, rec = carry
+            new_state, spikes = step(st, tables, cfg, halo_band_spikes=None)
+            rec = record_step(rec, spikes, gids, st["t"], recorder)
+            out = spikes if record_spikes else jnp.sum(spikes)
+            return (new_state, rec), out
+
+        (state, rec), out = jax.lax.scan(
+            body_rec, (state, init_recorder_state(recorder)), None,
+            length=n_steps)
+        return state, out, rec
 
     def body(carry, _):
         new_state, spikes = step(carry, tables, cfg, halo_band_spikes=None)
@@ -262,9 +285,13 @@ def firing_rate_hz(state: dict, cfg: EngineConfig,
     """Mean firing rate over the simulated window (active neurons only).
 
     ``n_steps=None`` derives the window from the state's own step
-    counter ``t`` -- the right choice for resumed/segmented runs, and
-    also correct for stacked ``(TY, TX, ...)`` distributed state (the
-    metrics are per-tile partial sums; ``jnp.sum`` totals them).
+    counter ``t`` -- correct for same-tiling resumed/segmented runs and
+    for stacked ``(TY, TX, ...)`` distributed state (the metrics are
+    per-tile partial sums; ``jnp.sum`` totals them).  NOT
+    retile-proof: an elastic retile zeroes the per-tile metrics (the
+    history moves to the checkpoint manifest), so for runs that may
+    have retiled use ``SimDriver.firing_rate_hz``, which re-adds the
+    manifest-carried base.
     """
     if n_steps is None:
         n_steps = int(np.asarray(jnp.max(state["t"])))

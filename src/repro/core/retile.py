@@ -14,8 +14,15 @@ is a pure relayout:
     as-is and ``t`` is preserved, so the ``t % d_ring`` alignment
     survives the move exactly;
   * ``t``: broadcast unchanged to the new tile array;
-  * ``metrics``: per-tile partial sums whose only invariant is the
-    global total -- the total lands on tile (0, 0), zeros elsewhere;
+  * ``metrics``: **zeroed**.  Cumulative run totals are global scalars,
+    not relayout-able per-tile state: parking them on an arbitrary tile
+    (the old behaviour put the whole history on tile (0, 0)) made
+    per-tile metric reads tiling-dependent.  The totals accumulated
+    before the retile travel in the checkpoint *manifest*
+    (``SimDriver`` saves ``metric_base`` / ``metric_totals`` meta and
+    re-adds the base to everything it reports), and the relaid state's
+    metrics restart at zero -- post-retile per-tile metrics describe
+    post-retile activity only;
   * ``rng``: per-tile streams are re-derived (``fold_in`` of the old
     (0, 0) key by new tile index) -- the resumed dynamics are a valid
     continuation, not a bitwise replay of the old tiling's stream.
@@ -123,13 +130,10 @@ def retile_state(state: dict, old: TileDecomposition,
     t_old = np.asarray(state["t"]).reshape(-1)[0]
     t = np.full((ty2, tx2), t_old, dtype=np.asarray(state["t"]).dtype)
 
-    def collapse(leaf):
-        arr = np.asarray(leaf)
-        out = np.zeros((ty2, tx2), dtype=arr.dtype)
-        out[0, 0] = arr.sum(dtype=arr.dtype)
-        return out
-
-    metrics = {k: collapse(v) for k, v in state["metrics"].items()}
+    # cumulative metric totals are carried as global scalars in the
+    # checkpoint manifest (see module docstring), not smeared over tiles
+    metrics = {k: np.zeros((ty2, tx2), dtype=np.asarray(v).dtype)
+               for k, v in state["metrics"].items()}
 
     base_key = jnp.asarray(np.asarray(state["rng"]).reshape(-1, 2)[0])
     rng = np.stack([

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention as _flash
 from .lif_step import lif_step_pallas
+from .spike_compact import spike_compact_pallas
 from .synaptic_accum import (event_delivery, event_delivery_banded as
                              _delivery_banded)
 
@@ -69,6 +70,14 @@ def synaptic_accum_banded(tiers, i_ring, t_slot, d_ring: int, plan=None):
     n_dropped) summed over tiers."""
     return _delivery_banded(tiers, i_ring, t_slot, d_ring, plan=plan,
                             interpret=_interpret())
+
+
+def spike_compact(spikes, n_rows: int, active_cap: int):
+    """Kernel-backed drop-in for ``synaptic_accum.compact_events``: the
+    ascending spiking-row index list (sink-padded) plus the uncapped
+    spike count.  Feeds the spike observatory's device-side recorder."""
+    return spike_compact_pallas(spikes, n_rows, active_cap,
+                                interpret=_interpret())
 
 
 def attention(q, k, v, *, causal=True, window=None, scale=None, q_offset=0,

@@ -1,0 +1,132 @@
+"""Spike compaction as a Pallas TPU kernel (device-side spike recording).
+
+The spike observatory's device-side recorder needs, every step, the
+ascending list of spiking-neuron indices -- the same compaction the
+event-delivery pipeline performs with ``jnp.nonzero`` (see
+``compact_events`` in ``synaptic_accum.py``).  This module provides that
+compaction as a Pallas kernel so the recording path can ride the same
+``use_kernels="auto"`` routing as delivery: compiled on TPU, interpreted
+elsewhere, with ``compact_events`` as the bit-identical XLA fallback.
+
+TPU shape of the problem (a stream compaction):
+
+  * the spike mask is streamed in ``CHUNK = 8 x 128`` blocks; a running
+    spike count in SMEM scratch carries the output base offset from
+    chunk to chunk (the grid is sequential on TPU);
+  * within a chunk, each live entry's output position is ``base +
+    inclusive_cumsum(mask) - 1``; the scatter to that position is a
+    one-hot MXU matmul -- ``(1, CHUNK) x (CHUNK, OUT_TILE)`` -- exactly
+    the scatter-as-matmul idiom of the delivery kernel;
+  * the output index list is tiled ``OUT_TILE`` wide on an outer grid
+    dimension, so the one-hot factor stays ~2 MiB regardless of the
+    compaction capacity; every output tile re-streams the chunks
+    (recomputing the cheap cumsum) and keeps only positions in its
+    window;
+  * the last chunk of each output-tile pass rewrites the accumulated
+    ``index + 1`` values to the ``compact_events`` contract: ascending
+    spiking indices in the first ``min(count, cap)`` slots, the sink row
+    ``n_rows`` everywhere else, and the (uncapped) spike count as a
+    scalar output.
+
+Indices ride the MXU as f32, exact for ``n_rows < 2**24`` -- far above
+any per-shard neuron count this repo targets (full-scale DPSNN shards
+are ~1e4 neurons).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+SUBLANES = 8
+CHUNK = SUBLANES * LANES       # spike-mask entries consumed per grid step
+OUT_TILE = 512                 # output index slots per outer grid step
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _compact_kernel(mask_ref, out_ref, cnt_ref, base_ref, *, cap: int,
+                    n_rows: int):
+    """One (output-tile, chunk) grid step of the stream compaction.
+
+    mask_ref: (SUBLANES, LANES) spike-mask chunk (f32, >0 == spiking)
+    out_ref:  (1, OUT_TILE) index-list tile, resident across chunks
+    cnt_ref:  (1, 1) SMEM -- total (uncapped) spike count
+    base_ref: (1,) SMEM scratch -- running count across chunks
+    """
+    o = pl.program_id(0)
+    c = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _reset():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        base_ref[0] = 0
+
+    live = (mask_ref[...] > 0.0).reshape(1, CHUNK)
+    base = base_ref[0]
+    incl = jnp.cumsum(live.astype(jnp.int32), axis=1)
+    pos = base + incl - 1                                  # (1, CHUNK)
+    gidx = c * CHUNK + jax.lax.broadcasted_iota(jnp.int32, (1, CHUNK), 1)
+    rel = pos - o * OUT_TILE                               # this tile's frame
+    ok = jnp.logical_and(live, jnp.logical_and(pos < cap, jnp.logical_and(
+        rel >= 0, rel < OUT_TILE)))
+    # scatter-as-matmul: out[p] += (gidx + 1) one-hotted to column rel
+    oh = rel.reshape(CHUNK, 1) == jax.lax.broadcasted_iota(
+        jnp.int32, (CHUNK, OUT_TILE), 1)
+    oh = jnp.where(ok.reshape(CHUNK, 1), oh, False)
+    contrib = jax.lax.dot_general(
+        (gidx + 1).astype(jnp.float32), oh.astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (1, OUT_TILE)
+    out_ref[...] += contrib.astype(jnp.int32)
+    new_base = base + jnp.sum(live.astype(jnp.int32))
+    base_ref[0] = new_base
+
+    @pl.when(c == n_chunks - 1)
+    def _finalize():
+        k = jnp.minimum(new_base, cap)
+        iota_abs = o * OUT_TILE + jax.lax.broadcasted_iota(
+            jnp.int32, (1, OUT_TILE), 1)
+        out_ref[...] = jnp.where(iota_abs < k, out_ref[...] - 1, n_rows)
+        cnt_ref[0, 0] = new_base
+
+
+def spike_compact_pallas(spikes, n_rows: int, active_cap: int, *,
+                         interpret: bool = True):
+    """Kernel-backed drop-in for ``synaptic_accum.compact_events``.
+
+    ``spikes``: (>= n_rows,) spike vector (>0 == spiking).  Returns
+    ``(idx, count)``: ``idx`` (active_cap,) int32 holds the ascending
+    indices of the first ``min(count, active_cap)`` spiking rows, padded
+    with the sink row ``n_rows``; ``count`` is the uncapped spike count
+    (callers derive drops as ``max(count - active_cap, 0)``).
+    """
+    spk = spikes[:n_rows].astype(jnp.float32)
+    n_pad = _ceil_to(max(n_rows, CHUNK), CHUNK)
+    spk = jnp.pad(spk, (0, n_pad - n_rows))
+    cap_pad = _ceil_to(max(active_cap, OUT_TILE), OUT_TILE)
+    n_chunks = n_pad // CHUNK
+    n_out = cap_pad // OUT_TILE
+
+    mask_spec = pl.BlockSpec((SUBLANES, LANES), lambda o, c: (c, 0))
+    out_spec = pl.BlockSpec((1, OUT_TILE), lambda o, c: (0, o))
+    cnt_spec = pl.BlockSpec(memory_space=pltpu.SMEM)
+    idx, cnt = pl.pallas_call(
+        functools.partial(_compact_kernel, cap=active_cap, n_rows=n_rows),
+        grid=(n_out, n_chunks),
+        in_specs=[mask_spec],
+        out_specs=(out_spec, cnt_spec),
+        out_shape=(jax.ShapeDtypeStruct((1, cap_pad), jnp.int32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(spk.reshape(-1, LANES))
+    return idx[0, :active_cap], cnt[0, 0]

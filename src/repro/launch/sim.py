@@ -32,7 +32,7 @@ import numpy as np
 from repro.checkpoint.store import latest_step
 from repro.configs.snn import reduced_case
 from repro.core.dist_engine import DistConfig
-from repro.core.engine import EngineConfig, firing_rate_hz
+from repro.core.engine import EngineConfig
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.launch.mesh import make_host_mesh
 from repro.parallel.compat import make_mesh
@@ -80,7 +80,9 @@ def build_driver(args) -> SimDriver:
                      keep=args.keep),
         dist, mesh, segment_steps=args.segment_steps,
         allow_retile=args.retile,
-        preempt_after_segments=args.preempt_after)
+        preempt_after_segments=args.preempt_after,
+        record_events=args.record,
+        record_capacity=args.record_cap)
 
 
 def main(argv=None):
@@ -108,25 +110,45 @@ def main(argv=None):
                     help="simulate a SIGTERM after N segments (testing)")
     ap.add_argument("--metrics-out", default=None,
                     help="write driver metrics_log JSON here")
+    ap.add_argument("--record", action="store_true",
+                    help="spike observatory: record every (step, neuron) "
+                         "spike event and spool it to <ckpt-dir>/spool "
+                         "(analyze with python -m repro.launch.analyze)")
+    ap.add_argument("--record-cap", type=int, default=None,
+                    help="recorder event capacity per shard per segment "
+                         "(default: the no-drop bound; overflow is "
+                         "counted, never silent)")
     args = ap.parse_args(argv)
 
     driver = build_driver(args)
     out = driver.run(args.steps)
     t = int(np.max(np.asarray(out["state"]["t"])))
-    rate = firing_rate_hz(out["state"], driver.dist_cfg.engine)
+    rate = driver.firing_rate_hz(out["state"])
+    totals = driver.metric_totals(out["state"])
     print(f"final_step={t} preempted={out['preempted']} "
           f"rate_hz={rate:.2f} "
           f"synapses={driver.table_stats['n_synapses']} "
+          f"dropped_events={totals['dropped']:.0f} "
           f"stragglers={len(out['stragglers'])}")
     if args.metrics_out:
         d = os.path.dirname(args.metrics_out)
         if d:
             os.makedirs(d, exist_ok=True)
+        payload = {"final_step": t, "preempted": out["preempted"],
+                   "rate_hz": rate,
+                   "tiles": list(driver.dist_cfg.tiles),
+                   "totals": totals,
+                   # active_cap compaction overflow, surfaced explicitly
+                   # (nonzero means results undercount synaptic events)
+                   "dropped_events": totals["dropped"],
+                   "metrics": out["metrics"]}
+        if driver.spool is not None:
+            payload["recording"] = {
+                "spooled_events": sum(driver.spool.offsets().values()),
+                "recorder_dropped": driver.recorder_dropped,
+                "spool_dir": driver.spool.directory}
         with open(args.metrics_out, "w") as f:
-            json.dump({"final_step": t, "preempted": out["preempted"],
-                       "rate_hz": rate,
-                       "tiles": list(driver.dist_cfg.tiles),
-                       "metrics": out["metrics"]}, f, indent=1)
+            json.dump(payload, f, indent=1)
     return out
 
 

@@ -1,0 +1,195 @@
+"""Host-side spike-log spooler: sharded, append-only, exactly-once.
+
+Layout (one directory per run, by default ``<ckpt_dir>/spool``)::
+
+    spool/
+        header.json                  # format + model identity (once)
+        events_000_000.spk ...       # one log per recording shard
+
+Each ``.spk`` file is a raw little-endian stream of fixed 8-byte
+records ``(step int32, gid int32)`` -- ``RECORD_DTYPE`` -- appended in
+sim-step order by a daemon writer thread (same pattern as
+``checkpoint.store.AsyncCheckpointer``: ``append`` costs a host-side
+copy, the file write happens off the hot path).
+
+Exactly-once contract with the segmented driver: the spooler's
+per-shard event counts are updated synchronously at ``append`` time, so
+the driver can snapshot ``offsets()`` into each checkpoint's manifest
+(atomic with the checkpoint).  On any restore -- preemption resume,
+failure rewind, elastic retile -- ``truncate(manifest_offsets)`` cuts
+every log back to the checkpoint's frontier and wipes logs the manifest
+does not know, so replayed segments re-append their events exactly once
+and a crash can never leave phantom events from an abandoned timeline.
+
+Shard files are keyed by the *writing* tile, but events carry global
+neuron ids, so logs written under different tilings (before/after an
+elastic retile) concatenate into one coherent global stream --
+``load_events`` merges and orders them by ``(step, gid)``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..checkpoint.store import AsyncWriterThread
+
+RECORD_DTYPE = np.dtype([("step", "<i4"), ("gid", "<i4")])
+FORMAT = "dpsnn-spk-v1"
+
+
+def shard_name(tile_y: int, tile_x: int) -> str:
+    return f"events_{tile_y:03d}_{tile_x:03d}.spk"
+
+
+class SpikeSpooler(AsyncWriterThread):
+    """Async writer of per-shard spike logs.
+
+    ``tiles``: the recording tiling -- its shard files are created
+    eagerly so zero-spike runs still leave valid (empty) logs.
+    ``header``: model-identity dict written to ``header.json`` on first
+    open (grid, law, dt -- everything analysis needs).  An existing
+    header is kept (resumes must not rewrite history) but **validated**:
+    a spool directory left behind by a *different* model is refused, the
+    same way the driver refuses a checkpoint-meta mismatch -- silently
+    appending 8x8x60 events to a 4x4x20 header would poison every
+    downstream rate (analysis normalizes by the header's n_neurons).
+    """
+
+    def __init__(self, directory: str, tiles, header: Optional[dict] = None):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        hpath = os.path.join(directory, "header.json")
+        if os.path.exists(hpath):
+            with open(hpath) as f:
+                have = json.load(f)
+            for k, v in (header or {}).items():
+                if k in have and have[k] != v:
+                    raise ValueError(
+                        f"spool header {hpath} was written with {k}="
+                        f"{have[k]!r}, current run has {k}={v!r} -- "
+                        "this spool directory belongs to a different "
+                        "model; use a fresh --ckpt-dir or delete it")
+        else:
+            with open(hpath, "w") as f:
+                json.dump({"format": FORMAT,
+                           "record": [list(t[:2]) for t in RECORD_DTYPE.descr],
+                           **(header or {})}, f, indent=1)
+        self._counts: Dict[str, int] = {}
+        for ty in range(tiles[0]):
+            for tx in range(tiles[1]):
+                name = shard_name(ty, tx)
+                path = os.path.join(directory, name)
+                with open(path, "ab"):
+                    pass
+                self._counts[name] = os.path.getsize(path) \
+                    // RECORD_DTYPE.itemsize
+        # pre-existing logs of *other* tilings (elastic resume) keep
+        # appending under their own names; count them too
+        for fn in os.listdir(directory):
+            if fn.endswith(".spk") and fn not in self._counts:
+                self._counts[fn] = os.path.getsize(
+                    os.path.join(directory, fn)) // RECORD_DTYPE.itemsize
+        super().__init__()
+
+    # ---- writer thread (AsyncWriterThread) -----------------------------
+    def _write(self, item):
+        name, arr = item
+        with open(os.path.join(self.directory, name), "ab") as f:
+            arr.tofile(f)
+
+    # ---- producer API --------------------------------------------------
+    def append(self, tile_y: int, tile_x: int, steps, gids):
+        """Enqueue one shard's segment events (valid prefixes only).
+
+        The shard's offset advances *synchronously*, so ``offsets()``
+        read immediately after covers this append -- the property the
+        checkpoint-manifest snapshot relies on."""
+        steps = np.asarray(steps)
+        n = len(steps)
+        name = shard_name(tile_y, tile_x)
+        if name not in self._counts:          # a tiling seen mid-run
+            with open(os.path.join(self.directory, name), "ab"):
+                pass
+            self._counts[name] = 0
+        if n == 0:
+            return
+        arr = np.empty(n, RECORD_DTYPE)
+        arr["step"] = steps
+        arr["gid"] = np.asarray(gids)
+        self._counts[name] += n
+        self._submit((name, arr))
+
+    def offsets(self) -> Dict[str, int]:
+        """Per-shard event counts covering every ``append`` so far (the
+        writes themselves may still be in flight)."""
+        return dict(self._counts)
+
+    def truncate(self, offsets: Dict[str, int]):
+        """Rewind every log to a checkpoint's spool frontier.
+
+        Logs absent from ``offsets`` are cut to zero: they belong to a
+        timeline the checkpoint does not know about (events appended
+        after the checkpoint, possibly under a different tiling)."""
+        self.wait()
+        for fn in sorted(self._counts):
+            path = os.path.join(self.directory, fn)
+            want = int(offsets.get(fn, 0)) * RECORD_DTYPE.itemsize
+            have = os.path.getsize(path)
+            if have < want:
+                raise IOError(
+                    f"spool log {path} holds {have} bytes but the "
+                    f"checkpoint manifest expects {want} -- the log was "
+                    "truncated or deleted behind the driver's back")
+            if have > want:
+                os.truncate(path, want)
+            self._counts[fn] = want // RECORD_DTYPE.itemsize
+        for fn, n in offsets.items():
+            if fn not in self._counts and int(n) > 0:
+                raise IOError(
+                    f"checkpoint manifest expects {n} events in missing "
+                    f"spool log {os.path.join(self.directory, fn)}")
+
+
+# --------------------------------------------------------------------------
+# Readers
+# --------------------------------------------------------------------------
+
+def _spool_dir(run_dir: str) -> str:
+    sub = os.path.join(run_dir, "spool")
+    return sub if os.path.isdir(sub) else run_dir
+
+
+def read_header(run_dir: str) -> dict:
+    """The spool's ``header.json``; ``run_dir`` may be the run (ckpt)
+    directory or the spool directory itself."""
+    with open(os.path.join(_spool_dir(run_dir), "header.json")) as f:
+        h = json.load(f)
+    if h.get("format") != FORMAT:
+        raise ValueError(f"{run_dir}: unknown spool format "
+                         f"{h.get('format')!r} (expected {FORMAT!r})")
+    return h
+
+
+def shard_events(run_dir: str) -> Dict[str, np.ndarray]:
+    """Per-shard raw event arrays (file order preserved)."""
+    d = _spool_dir(run_dir)
+    out = {}
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".spk"):
+            out[fn] = np.fromfile(os.path.join(d, fn), dtype=RECORD_DTYPE)
+    return out
+
+
+def load_events(run_dir: str) -> np.ndarray:
+    """All spooled events merged into one global stream, ordered by
+    ``(step, gid)`` -- the canonical order for comparing runs (shard
+    interleaving is tiling-dependent; the ordered stream is not)."""
+    shards = list(shard_events(run_dir).values())
+    if not shards:
+        raise FileNotFoundError(f"no .spk spike logs under {run_dir}")
+    ev = np.concatenate(shards) if len(shards) > 1 else shards[0]
+    return ev[np.lexsort((ev["gid"], ev["step"]))]

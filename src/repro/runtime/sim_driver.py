@@ -18,16 +18,31 @@ driver gives the distributed SNN engine the same operational envelope:
     resume on tiles ``(c, d)`` -- neuron state and the in-flight delay
     ring are permuted by global column id (``core.retile``) while the
     synapse tables are rebuilt deterministically for the new
-    decomposition from the engine seed.
+    decomposition from the engine seed;
+  * **spike recording** (``record_events=True``): the device-side
+    recorder (``obs.record``) streams every spike as a ``(step, global
+    neuron id)`` event into a bounded per-segment buffer, which the
+    host spooler (``obs.spool``) drains asynchronously into sharded
+    append-only logs under ``<ckpt_dir>/spool``.  Per-shard spool
+    offsets ride in every checkpoint manifest, and every restore
+    truncates the logs back to that frontier, so preemption/failure
+    replay yields each event exactly once.
 
 The tiling, grid, seed and connectivity law of the saved state ride
 inside each checkpoint's manifest (atomic with the checkpoint), so a
 resuming process detects a geometry change -- and refuses a silently
 different model -- without guessing from array shapes.
+
+Cumulative metric totals (spikes/events/dropped) are **global scalars**:
+the manifest carries ``metric_base`` (totals lost to state zeroing at
+an elastic retile) and ``metric_totals`` (base + current state sums),
+and every total the driver reports adds the base back -- so totals are
+identical whatever tiling history a run went through.
 """
 
 from __future__ import annotations
 
+import os
 from typing import Callable, Dict, Optional
 
 import jax
@@ -41,6 +56,8 @@ from ..core.dist_engine import (DistConfig, abstract_dist_inputs,
                                 init_dist_state, make_sim_fn)
 from ..core.retile import retile_config, retile_state
 from .driver import DriverConfig, FaultTolerantLoop, log
+
+METRIC_KEYS = ("spikes", "events", "dropped")
 
 
 class SimDriver(FaultTolerantLoop):
@@ -58,13 +75,24 @@ class SimDriver(FaultTolerantLoop):
     after that many segments (counted in this process) -- the driver
     checkpoints at the segment boundary and exits, exactly like the
     signal path.
+
+    ``record_events=True`` turns on the spike observatory;
+    ``record_capacity`` overrides the per-shard per-segment event
+    buffer (default: the no-drop bound ``active_cap_local *
+    segment_steps``; overflow is counted, never silent).  Recording is
+    a pure observer -- spike trains are bit-identical with it on or
+    off -- but for *complete* logs it must be enabled for the whole
+    run: segments simulated with recording off are simply absent from
+    the spool.
     """
 
     def __init__(self, cfg: DriverConfig, dist_cfg: DistConfig, mesh,
                  segment_steps: int, record_spikes: bool = True,
                  allow_retile: bool = False,
                  fault_hook: Optional[Callable] = None,
-                 preempt_after_segments: Optional[int] = None):
+                 preempt_after_segments: Optional[int] = None,
+                 record_events: bool = False,
+                 record_capacity: Optional[int] = None):
         super().__init__(cfg)
         if segment_steps <= 0:
             raise ValueError(f"segment_steps={segment_steps} must be > 0")
@@ -79,7 +107,34 @@ class SimDriver(FaultTolerantLoop):
         self._state_sh, table_sh = dist_shardings(dist_cfg, mesh)
         tables, self.table_stats = build_dist_tables(dist_cfg)
         self.tables = jax.device_put(tables, table_sh)
-        self._sim = make_sim_fn(dist_cfg, mesh, segment_steps)
+        # cumulative totals not represented in the (possibly retiled)
+        # device state -- see module docstring
+        self._metric_base = {k: 0.0 for k in METRIC_KEYS}
+        self._warned_drops = False
+        self.recorder = None
+        self.spool = None
+        self.recorder_dropped = 0
+        if record_events:
+            from jax.sharding import NamedSharding
+            from ..obs.record import recorder_spec, stacked_gid_maps
+            from ..obs.spool import SpikeSpooler
+            e = dist_cfg.engine
+            d = e.decomp
+            self.recorder = recorder_spec(e, segment_steps,
+                                          capacity=record_capacity)
+            self._gids = jax.device_put(
+                jnp.asarray(stacked_gid_maps(d)),
+                NamedSharding(mesh, dist_cfg.pspec(1)))
+            self.spool = SpikeSpooler(
+                os.path.join(cfg.ckpt_dir, "spool"), dist_cfg.tiles,
+                header={"grid": [d.grid.height, d.grid.width,
+                                 d.grid.n_per_column],
+                        "law": e.law.kind, "seed": e.seed,
+                        "dt_ms": e.lif.dt_ms,
+                        "n_neurons": d.grid.n_neurons,
+                        "recorder_capacity": self.recorder.capacity})
+        self._sim = make_sim_fn(dist_cfg, mesh, segment_steps,
+                                recorder=self.recorder)
         # per-step global spike counts keyed by segment start step:
         # replayed segments overwrite their slot instead of duplicating
         self._spikes: Dict[int, np.ndarray] = {}
@@ -93,18 +148,34 @@ class SimDriver(FaultTolerantLoop):
                 "grid": [d.grid.height, d.grid.width, d.grid.n_per_column],
                 "law": e.law.kind, "radius": d.radius, "seed": e.seed,
                 "table_realization": TABLE_REALIZATION_VERSION,
-                "segment_steps": self.step_size}
+                "segment_steps": self.step_size,
+                "metric_base": dict(self._metric_base)}
 
     def _save(self, step: int, state):
         # meta rides inside the checkpoint's manifest: atomic with the
         # checkpoint, so a crash can never publish meta describing a
-        # tiling the newest on-disk checkpoint does not have
-        self.ckpt.save(step, state, meta=self._meta())
+        # tiling (or spool frontier) the newest on-disk checkpoint does
+        # not have
+        meta = self._meta()
+        meta["metric_totals"] = self.metric_totals(state)
+        if self.spool is not None:
+            # the manifest's spool offsets must never reference bytes
+            # that are not yet durable: a hard crash between manifest
+            # publish and the spool worker's write would otherwise leave
+            # logs permanently shorter than every manifest's frontier --
+            # an unresumable run.  Drain the (small) spool queue first.
+            self.spool.wait()
+            meta["spool_offsets"] = self.spool.offsets()
+            meta["recorder_dropped"] = self.recorder_dropped
+        self.ckpt.save(step, state, meta=meta)
 
     # ---- restore / init ----------------------------------------------
     def _restore_or_init(self):
         last = latest_step(self.cfg.ckpt_dir)
         if last is None:
+            self._metric_base = {k: 0.0 for k in METRIC_KEYS}
+            if self.spool is not None:
+                self.spool.truncate({})
             state = jax.device_put(init_dist_state(self.dist_cfg),
                                    self._state_sh)
             return 0, state
@@ -123,6 +194,9 @@ class SimDriver(FaultTolerantLoop):
                     f"{key}={meta[key]}, current config has "
                     f"{key}={mine[key]} -- resuming would silently "
                     "continue a different model")
+        base = meta.get("metric_base", {})
+        self._metric_base = {k: float(base.get(k, 0.0))
+                             for k in METRIC_KEYS}
         old_tiles = (meta.get("tiles_y", d.tiles_y),
                      meta.get("tiles_x", d.tiles_x))
         if old_tiles == (d.tiles_y, d.tiles_x):
@@ -141,8 +215,19 @@ class SimDriver(FaultTolerantLoop):
             old_cfg = retile_config(self.dist_cfg, *old_tiles)
             host_state = restore_checkpoint(
                 self.cfg.ckpt_dir, last, abstract_dist_inputs(old_cfg)[0])
+            # the relayout zeroes per-tile metrics: fold the restored
+            # partial sums into the global base so totals survive the
+            # retile exactly (whatever tiling we came from)
+            for k in METRIC_KEYS:
+                self._metric_base[k] += float(
+                    np.sum(np.asarray(host_state["metrics"][k])))
             state = retile_state(host_state, old_cfg.engine.decomp, d)
             state = jax.device_put(state, self._state_sh)
+        if self.spool is not None:
+            # exactly-once: cut every log back to this checkpoint's
+            # frontier; replayed segments re-append their events
+            self.spool.truncate(meta.get("spool_offsets", {}))
+            self.recorder_dropped = int(meta.get("recorder_dropped", 0))
         return last, state
 
     def _on_rewind(self, step: int):
@@ -153,7 +238,11 @@ class SimDriver(FaultTolerantLoop):
     def _step_once(self, state, step):
         if self.fault_hook:
             self.fault_hook(step)
-        state, per_step = self._sim(state, self.tables)
+        if self.recorder is not None:
+            state, per_step, rec = self._sim(state, self.tables, self._gids)
+            self._drain_recorder(rec)
+        else:
+            state, per_step = self._sim(state, self.tables)
         self._segments_done += 1
         if self._preempt_after is not None \
                 and self._segments_done >= self._preempt_after:
@@ -161,13 +250,56 @@ class SimDriver(FaultTolerantLoop):
         if self.record_spikes:
             self._spikes[step] = np.asarray(per_step).sum(axis=(0, 1))
         m = state["metrics"]
+        base = self._metric_base
+        dropped = base["dropped"] + float(np.asarray(jnp.sum(m["dropped"])))
+        if dropped > 0 and not self._warned_drops:
+            self._warned_drops = True
+            log.warning(
+                "event-delivery compaction dropped %d spike(s) so far "
+                "(active_cap overflow) -- results undercount synaptic "
+                "events; raise EngineConfig.cap_headroom", int(dropped))
         metrics = {"sim_t": jnp.max(state["t"]),
-                   "spikes": jnp.sum(m["spikes"]),
-                   "events": jnp.sum(m["events"]),
-                   "dropped": jnp.sum(m["dropped"])}
+                   "spikes": base["spikes"] + jnp.sum(m["spikes"]),
+                   "events": base["events"] + jnp.sum(m["events"]),
+                   "dropped": dropped}
         return state, metrics
 
+    def _drain_recorder(self, rec):
+        """Spool one segment's event buffers (all shards)."""
+        rec_h = jax.device_get(rec)
+        ty, tx = self.dist_cfg.tiles
+        for y in range(ty):
+            for x in range(tx):
+                cnt = int(rec_h["count"][y, x])
+                self.spool.append(y, x, rec_h["step"][y, x, :cnt],
+                                  rec_h["gid"][y, x, :cnt])
+        seg_dropped = int(np.sum(rec_h["dropped"]))
+        if seg_dropped:
+            self.recorder_dropped += seg_dropped
+            log.warning(
+                "spike recorder dropped %d event(s) this segment "
+                "(%d total) -- raise record_capacity (CLI: "
+                "--record-cap) for complete logs",
+                seg_dropped, self.recorder_dropped)
+
     # ---- host-side views ----------------------------------------------
+    def metric_totals(self, state) -> Dict[str, float]:
+        """Cumulative run totals: the manifest-carried base (history
+        predating an elastic retile) plus the live state's per-tile
+        partial sums.  Tiling-independent by construction."""
+        return {k: self._metric_base[k]
+                + float(np.asarray(jnp.sum(state["metrics"][k])))
+                for k in METRIC_KEYS}
+
+    def firing_rate_hz(self, state) -> float:
+        """Mean rate over the whole run (active neurons), retile-proof:
+        uses ``metric_totals`` rather than raw state sums."""
+        t = int(np.asarray(jnp.max(state["t"])))
+        n_active = float(np.asarray(jnp.sum(state["active"])))
+        sim_sec = t * self.dist_cfg.engine.lif.dt_ms * 1e-3
+        return self.metric_totals(state)["spikes"] \
+            / max(n_active, 1.0) / max(sim_sec, 1e-9)
+
     def spike_counts(self) -> np.ndarray:
         """Global per-step spike counts recorded by this process, in sim
         step order (replayed segments appear once)."""
@@ -175,3 +307,9 @@ class SimDriver(FaultTolerantLoop):
             return np.zeros((0,), np.float32)
         return np.concatenate(
             [self._spikes[k] for k in sorted(self._spikes)])
+
+    def run(self, n_steps: int):
+        out = super().run(n_steps)
+        if self.spool is not None:
+            self.spool.wait()            # logs durable before we report
+        return out

@@ -159,8 +159,13 @@ for s in range(ring_old.shape[0]):
 assert int(np.max(np.asarray(state["t"]))) == 60
 out2 = d2.run(120)
 assert out2["final_step"] == 120
-rate = firing_rate_hz(out2["state"], dist(2, 1).engine)
+# driver-level rate: re-adds the manifest-carried metric base the
+# retile moved out of the per-tile state (engine.firing_rate_hz on a
+# retiled state would silently undercount the pre-retile half)
+rate = d2.firing_rate_hz(out2["state"])
+state_rate = firing_rate_hz(out2["state"], dist(2, 1).engine)
 assert np.isfinite(rate) and 0.0 <= rate < 200.0
+assert state_rate <= rate  # state alone lost the pre-retile history
 print("retile resume OK", rate)
 """, devices=2)
 

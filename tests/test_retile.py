@@ -3,7 +3,9 @@
 Pure host-side checks (no multi-device mesh needed): every neuron's
 (v, c, refrac), its active flag, and every in-flight delay-ring current
 must land at the correct new (tile, local-index) for its global column
-id; ``t`` and the global metric totals are preserved.
+id; ``t`` is preserved and the per-tile metrics restart at zero (the
+cumulative totals travel as global scalars in the checkpoint manifest,
+driven by SimDriver -- see test_sim_driver.py).
 """
 
 import numpy as np
@@ -108,10 +110,14 @@ def test_retile_places_state_by_global_column_id(old_tiles, new_tiles):
                   for x in range(new_d.tiles_x)])
         for y in range(new_d.tiles_y)])
     np.testing.assert_array_equal(np.asarray(out["active"]), want_active)
-    # metric totals preserved
+    # metrics restart at zero on every tile: cumulative totals are
+    # global scalars (checkpoint manifest), not relayout-able per-tile
+    # state -- parking history on an arbitrary tile made per-tile
+    # metric reads tiling-dependent
     for k in ("spikes", "events", "dropped"):
-        assert np.asarray(out["metrics"][k]).sum() == pytest.approx(
-            st["metrics"][k].sum())
+        arr = np.asarray(out["metrics"][k])
+        np.testing.assert_array_equal(arr, np.zeros_like(arr))
+        assert arr.dtype == st["metrics"][k].dtype
     # dtypes survive the relayout (would otherwise poison the jitted step)
     for name, leaf in (("v", out["neuron"]["v"]),
                        ("refrac", out["neuron"]["refrac"]),
