@@ -94,6 +94,20 @@ def checkpoint_meta(directory: str, step: int) -> dict:
         return json.load(f).get("meta", {})
 
 
+def refuse_meta_drift(meta: dict, mine: dict, keys, where: str):
+    """Refuse to resume a checkpoint whose manifest meta disagrees with
+    the current config on any of ``keys`` (keys absent from ``meta`` are
+    skipped: pre-versioning manifests).  Shared by the drivers so every
+    identity refusal carries the same actionable message."""
+    for key in keys:
+        if key in meta and meta[key] != mine[key]:
+            raise ValueError(
+                f"checkpoint in {where} was written with "
+                f"{key}={meta[key]}, current config has "
+                f"{key}={mine[key]} -- resuming would silently "
+                "continue a different model")
+
+
 def restore_checkpoint(directory: str, step: int, like,
                        shardings=None, verify: bool = True):
     """Restore into the structure of ``like`` (a pytree of arrays or

@@ -28,6 +28,7 @@ from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .engine import (EngineConfig, deliver_event_tiers, external_drive,
@@ -104,7 +105,16 @@ def build_dist_tables(cfg: DistConfig) -> dict:
 
 
 def abstract_dist_inputs(cfg: DistConfig):
-    """ShapeDtypeStructs for (state, tables) -- dry-run inputs, no alloc."""
+    """ShapeDtypeStructs for (state, tables) -- dry-run inputs, no alloc.
+
+    When the engine is plastic (``cfg.engine.stdp`` set) the state grows
+    a ``plastic`` subtree -- per-tier synaptic weights plus the STDP
+    pre/post traces -- because plastic weights are *dynamics*, carried
+    through the scan and checkpointed with the neuron state (the static
+    ``tables`` argument then only supplies the realization's structure:
+    targets, delays, occupancy and the build-time weights that define
+    the plastic mask).
+    """
     ty, tx = cfg.tiles
     e = cfg.engine
     spec = e.spec()
@@ -126,6 +136,14 @@ def abstract_dist_inputs(cfg: DistConfig):
                     "dropped": sd((), jnp.float32)},
     }
     abst = spec.abstract_tables()
+    if e.stdp is not None:
+        tiers = [abst["local"]] + list(abst["halo"])
+        state["plastic"] = {
+            "w": [sd(t["w"].shape, t["w"].dtype) for t in tiers],
+            "x_pre": [sd((t["tgt"].shape[0],), jnp.float32)
+                      for t in tiers],
+            "x_post": sd((n_local,), jnp.float32),
+        }
 
     def lift(t):
         return {k: jax.ShapeDtypeStruct((ty, tx) + v.shape, v.dtype)
@@ -134,6 +152,60 @@ def abstract_dist_inputs(cfg: DistConfig):
     tables = {"local": lift(abst["local"]),
               "halo": [lift(t) for t in abst["halo"]]}
     return state, tables
+
+
+def init_dist_plastic_state(cfg: DistConfig, tables: dict) -> dict:
+    """Fresh plastic carry: weights copied from the stacked build tables
+    (copies, never views -- the sim donates its state argument, and the
+    static tables must survive every segment), traces at zero."""
+    ty, tx = cfg.tiles
+    n_local = cfg.engine.spec().n_local
+    tiers = [tables["local"]] + list(tables["halo"])
+    return {
+        "w": [jnp.asarray(np.asarray(t["w"])) for t in tiers],
+        "x_pre": [jnp.zeros(t["tgt"].shape[:-1], jnp.float32)
+                  for t in tiers],
+        "x_post": jnp.zeros((ty, tx, n_local), jnp.float32),
+    }
+
+
+def build_dist_inverse_index(cfg: DistConfig, tables: dict):
+    """Per-shard target-major inverse indices, stacked on (TY, TX).
+
+    Each shard's index maps a local (target) neuron to the virtual flat
+    slots of its incoming synapses across *all* tiers -- local and halo
+    -- which is how a post-spike reaches the cross-tile synapses it must
+    potentiate.  In-degree padding (``K_in``) differs per shard, so
+    slots are padded to the max with each shard's ``total`` sentinel
+    (already the "no synapse" value the LTP scatter masks on).
+
+    Returns ``(slots, aux)``: ``slots`` a (TY, TX, n_local, K) int32
+    array, ``aux`` the tier geometry (``bases``/``sizes``/``total``),
+    identical across shards by construction.
+    """
+    from .stdp import build_inverse_index
+    ty, tx = cfg.tiles
+    n_local = cfg.engine.spec().n_local
+    invs = []
+    for y in range(ty):
+        row = []
+        for x in range(tx):
+            tiers = [{k: np.asarray(v[y, x])
+                      for k, v in tables["local"].items()}]
+            tiers += [{k: np.asarray(v[y, x]) for k, v in t.items()}
+                      for t in tables["halo"]]
+            row.append(build_inverse_index(tiers, n_local))
+        invs.append(row)
+    aux = {"bases": invs[0][0]["bases"], "sizes": invs[0][0]["sizes"],
+           "total": invs[0][0]["total"]}
+    k_max = max(int(np.asarray(i["slots"]).shape[1])
+                for r in invs for i in r)
+    stacked = np.full((ty, tx, n_local, k_max), aux["total"], np.int32)
+    for y in range(ty):
+        for x in range(tx):
+            s = np.asarray(invs[y][x]["slots"])
+            stacked[y, x, :, :s.shape[1]] = s
+    return jnp.asarray(stacked), aux
 
 
 def dist_shardings(cfg: DistConfig, mesh: Mesh):
@@ -168,15 +240,30 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
     between segments).
 
     ``recorder``: optional ``obs.record.RecorderSpec``.  When given the
-    signature becomes ``sim(state, tables, gids) -> (state, per_step,
-    recorder_state)`` -- ``gids`` is the stacked ``(TY, TX, n_local+1)``
-    global-neuron-id map (``obs.record.stacked_gid_maps``) and
-    ``recorder_state`` holds each shard's per-segment ``(step, gid)``
-    event buffer, valid-prefix ``count`` and overflow ``dropped``
-    counter, freshly zeroed at the start of every call (the host spooler
-    drains it between segments).  Recording is a pure observer of the
-    spike vector: dynamics and ``per_step`` outputs are bit-identical
-    with or without it.
+    signature grows a trailing ``gids`` argument -- the stacked ``(TY,
+    TX, n_local+1)`` global-neuron-id map (``obs.record.
+    stacked_gid_maps``) -- and a trailing ``recorder_state`` output
+    holding each shard's per-segment ``(step, gid)`` event buffer,
+    valid-prefix ``count`` and overflow ``dropped`` counter, freshly
+    zeroed at the start of every call (the host spooler drains it
+    between segments).  Recording is a pure observer of the spike
+    vector: dynamics and ``per_step`` outputs are bit-identical with or
+    without it.
+
+    **Plasticity** (``cfg.engine.stdp`` set): the STDP weight tables
+    and pre/post trace arrays join the scan carry as
+    ``state["plastic"]`` (see ``abstract_dist_inputs``) and the
+    signature grows an ``inv_slots`` argument -- the stacked per-shard
+    target-major inverse index from ``build_dist_inverse_index`` --
+    between ``tables`` and ``gids``.  Delivery then reads weights from
+    the carry (the ``tables`` argument supplies structure and the
+    build-time weights that fix the plastic mask), and every step ends
+    with a halo-aware ``stdp_step`` over all tiers: cross-tile synapses
+    depress from the halo spike vectors the delivery consumed and
+    potentiate through the inverse index, with per-band halo pre-traces
+    that track each remote source exactly like its home shard does.
+
+    Full signature order: ``sim(state, tables[, inv_slots][, gids])``.
     """
     e = cfg.engine
     spec = e.spec()
@@ -190,8 +277,17 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
     # compiles against (recomputing it per scan trace re-runs the
     # numpy fan-out analysis behind halo_bands()).
     plan = spec.delivery_plan() if e.mode == "event" else None
+    plastic = e.stdp is not None
+    if plastic:
+        from .stdp import _tier_sizes
+        abst = spec.abstract_tables()
+        inv_bases, inv_sizes = _tier_sizes([abst["local"]] + abst["halo"])
+        inv_total = (int(inv_bases[-1] + inv_sizes[-1])
+                     if len(inv_sizes) else 0)
+        pre_caps = [spec.active_cap_local] \
+            + [spec.active_cap_band(b) for b in bands]
 
-    def shard_step(state, tables):
+    def shard_step(state, tables, masks, inv):
         key, k_ext = jax.random.split(state["rng"])
         slot = state["t"] % e.d_ring
         i_now = state["i_ring"][slot] + external_drive(k_ext, n_local, e)
@@ -215,19 +311,26 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
         region_flat = region.reshape(-1)
         halo_spikes = [region_flat[idx] for idx in band_idx]
 
-        # --- delivery --------------------------------------------------
+        # --- delivery (plastic runs read weights from the carry) ------
+        if plastic:
+            pl = state["plastic"]
+            tabs = {"local": dict(tables["local"], w=pl["w"][0]),
+                    "halo": [dict(t, w=w) for t, w in
+                             zip(tables["halo"], pl["w"][1:])]}
+        else:
+            tabs = tables
         m = state["metrics"]
         if e.mode == "event":
             i_ring, ev, dr = deliver_event_tiers(
-                tables, spikes, halo_spikes, spec, i_ring, slot,
+                tabs, spikes, halo_spikes, spec, i_ring, slot,
                 e.d_ring, e.kernels_enabled, plan=plan)
         else:
-            i_ring = deliver_gather_all(tables["local"], spikes, i_ring,
+            i_ring = deliver_gather_all(tabs["local"], spikes, i_ring,
                                         slot, e.d_ring)
-            ev = jnp.sum(tables["local"]["nnz"][:n_local].astype(jnp.float32)
+            ev = jnp.sum(tabs["local"]["nnz"][:n_local].astype(jnp.float32)
                          * spikes)
             dr = jnp.zeros((), jnp.float32)
-            for tab, spk in zip(tables["halo"], halo_spikes):
+            for tab, spk in zip(tabs["halo"], halo_spikes):
                 i_ring = deliver_gather_all(tab, spk, i_ring, slot, e.d_ring)
                 ev += jnp.sum(tab["nnz"][:-1].astype(jnp.float32) * spk)
 
@@ -238,6 +341,17 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
                         "events": m["events"] + ev,
                         "dropped": m["dropped"] + dr},
         }
+        if plastic:
+            from .stdp import stdp_step
+            tiers = [tabs["local"]] + list(tabs["halo"])
+            new_tiers, traces = stdp_step(
+                tiers, masks, inv,
+                {"x_pre": pl["x_pre"], "x_post": pl["x_post"]},
+                [spikes] + halo_spikes, spikes, e.stdp,
+                pre_caps, spec.active_cap_local)
+            new_state["plastic"] = {"w": [t["w"] for t in new_tiers],
+                                    "x_pre": traces["x_pre"],
+                                    "x_post": traces["x_post"]}
         return new_state, spikes
 
     state_sp = jax.tree.map(
@@ -252,50 +366,54 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
     if recorder is not None:
         from ..obs.record import init_recorder_state, record_step
 
-        def shard_body_rec(state_blk, tables_blk, gids_blk):
-            state = jax.tree.map(lambda a: a[0, 0], state_blk)
-            tables = jax.tree.map(lambda a: a[0, 0], tables_blk)
-            gids = gids_blk[0, 0]
+    def shard_body(state_blk, tables_blk, *extra):
+        state = jax.tree.map(lambda a: a[0, 0], state_blk)
+        tables = jax.tree.map(lambda a: a[0, 0], tables_blk)
+        extra = list(extra)
+        masks = inv = None
+        if plastic:
+            from .stdp import plastic_masks
+            inv = {"slots": extra.pop(0)[0, 0], "bases": inv_bases,
+                   "sizes": inv_sizes, "total": inv_total}
+            masks = plastic_masks([tables["local"]] + list(tables["halo"]))
+        if recorder is not None:
+            gids = extra.pop(0)[0, 0]
 
             def body(carry, _):
                 st, rec = carry
-                new_state, spikes = shard_step(st, tables)
+                new_state, spikes = shard_step(st, tables, masks, inv)
                 rec = record_step(rec, spikes, gids, st["t"], recorder)
                 return (new_state, rec), jnp.sum(spikes)
 
             (state, rec), per_step = jax.lax.scan(
                 body, (state, init_recorder_state(recorder)), None,
                 length=n_steps)
-            lift = lambda a: a[None, None]                      # noqa: E731
-            return (jax.tree.map(lift, state),
-                    per_step[None, None] if record_rate else None,
-                    jax.tree.map(lift, rec))
+        else:
+            def body(carry, _):
+                st, spikes = shard_step(carry, tables, masks, inv)
+                return st, jnp.sum(spikes)
 
-        rec_sp = jax.tree.map(lambda leaf: cfg.pspec(leaf.ndim),
-                              init_recorder_state(recorder))
-        mapped = shard_map(
-            shard_body_rec, mesh=mesh,
-            in_specs=(state_sp, table_sp, cfg.pspec(1)),
-            out_specs=(state_sp, cfg.pspec(1) if record_rate else None,
-                       rec_sp))
-        return jax.jit(mapped, donate_argnums=(0,))
+            state, per_step = jax.lax.scan(body, state, None,
+                                           length=n_steps)
+        lift = lambda a: a[None, None]                          # noqa: E731
+        out = (jax.tree.map(lift, state),
+               per_step[None, None] if record_rate else None)
+        if recorder is not None:
+            out += (jax.tree.map(lift, rec),)
+        return out
 
-    def shard_body(state_blk, tables_blk):
-        state = jax.tree.map(lambda a: a[0, 0], state_blk)
-        tables = jax.tree.map(lambda a: a[0, 0], tables_blk)
-
-        def body(carry, _):
-            st, spikes = shard_step(carry, tables)
-            return st, jnp.sum(spikes)
-
-        state, per_step = jax.lax.scan(body, state, None, length=n_steps)
-        state = jax.tree.map(lambda a: a[None, None], state)
-        return state, per_step[None, None] if record_rate else None
-
-    out_sp = (state_sp, cfg.pspec(1) if record_rate else None)
+    in_specs = [state_sp, table_sp]
+    if plastic:
+        in_specs.append(cfg.pspec(2))                  # inverse-index slots
+    if recorder is not None:
+        in_specs.append(cfg.pspec(1))                  # gid maps
+    out_specs = [state_sp, cfg.pspec(1) if record_rate else None]
+    if recorder is not None:
+        out_specs.append(jax.tree.map(lambda leaf: cfg.pspec(leaf.ndim),
+                                      init_recorder_state(recorder)))
     mapped = shard_map(shard_body, mesh=mesh,
-                       in_specs=(state_sp, table_sp),
-                       out_specs=out_sp)
+                       in_specs=tuple(in_specs),
+                       out_specs=tuple(out_specs))
     return jax.jit(mapped, donate_argnums=(0,))
 
 
@@ -307,6 +425,12 @@ def simulate(cfg: DistConfig, mesh: Mesh, n_steps: int, timed: bool = False):
     """
     import time
 
+    if cfg.engine.stdp is not None:
+        raise ValueError(
+            "simulate() is the static convenience driver; plastic runs "
+            "carry their weight tables through checkpoints -- drive them "
+            "via runtime.sim_driver.SimDriver (CLI: repro.launch.sim "
+            "--plastic)")
     state = init_dist_state(cfg)
     tables, stats = build_dist_tables(cfg)
     sharding_state, sharding_tables = dist_shardings(cfg, mesh)

@@ -66,11 +66,15 @@ class EngineConfig:
 
     def spec(self) -> SynapseTableSpec:
         single = self.decomp.tiles_y == 1 and self.decomp.tiles_x == 1
+        # plastic runs keep band rows for every stencil-reachable halo
+        # column (floor 0.0): the learned realization must relay across
+        # tilings without a floor-dropped column orphaning its weights
         return SynapseTableSpec(
             decomp=self.decomp, law=self.law, d_ring=self.d_ring,
             dt_ms=self.lif.dt_ms, rate_cap_hz=self.rate_cap_hz,
             cap_headroom=self.cap_headroom,
-            weight_dtype=self.weight_dtype, single_shard=single)
+            weight_dtype=self.weight_dtype, single_shard=single,
+            halo_floor=0.0 if self.stdp is not None else 0.5)
 
 
 def init_sim_state(cfg: EngineConfig, tile_y: int = 0, tile_x: int = 0,
@@ -247,31 +251,46 @@ def run_plastic(state: dict, tables: dict, stdp_aux: dict,
     """Scan with STDP enabled: synapse tables join the carry.
 
     ``stdp_aux`` comes from ``init_plasticity`` (inverse index, masks,
-    trace state).  Single-shard only (tables have no halo tiers).
+    trace state).  Single-shard only: there is no halo source here, so
+    only the local tier is stepped -- halo tiers in ``stdp_aux`` (a
+    multi-tile config's tables) are ignored, exactly like delivery
+    ignores them without halo spikes.  The distributed plastic path is
+    ``dist_engine.make_sim_fn`` with ``EngineConfig.stdp`` set.
     """
     from .stdp import stdp_step
 
     spec = cfg.spec()
+    masks = stdp_aux["masks"][:1]
+    traces_init = {"x_pre": stdp_aux["traces"]["x_pre"][:1],
+                   "x_post": stdp_aux["traces"]["x_post"]}
 
     def body(carry, _):
         st, tabs, traces = carry
         new_state, spikes = step(st, tabs, cfg, halo_band_spikes=None)
         tiers, traces = stdp_step(
-            [tabs["local"]], stdp_aux["masks"], stdp_aux["inv"], traces,
+            [tabs["local"]], masks, stdp_aux["inv"], traces,
             [spikes], spikes, cfg.stdp,
             [spec.active_cap_local], spec.active_cap_local)
         tabs = dict(tabs, local=tiers[0])
         return (new_state, tabs, traces), jnp.sum(spikes)
 
-    return jax.lax.scan(body, (state, tables, stdp_aux["traces"]), None,
+    return jax.lax.scan(body, (state, tables, traces_init), None,
                         length=n_steps)
 
 
 def init_plasticity(tables: dict, cfg: EngineConfig) -> dict:
-    """Build the STDP auxiliaries (inverse index, plastic masks, traces)."""
+    """Build the STDP auxiliaries (inverse index, plastic masks, traces).
+
+    Covers every tier the tables carry -- local plus any halo bands --
+    so post-spikes reach their cross-tile incoming synapses through the
+    inverse index.  Single-shard tables have no halo tiers, so this
+    reduces to the local-only index ``run_plastic`` consumes; the
+    distributed engine builds the same structures per shard via
+    ``dist_engine.build_dist_inverse_index``.
+    """
     from .stdp import build_inverse_index, init_stdp_state, plastic_masks
 
-    tiers = [tables["local"]]
+    tiers = [tables["local"]] + list(tables.get("halo", []))
     n_local = cfg.spec().n_local
     return {
         "inv": build_inverse_index(tiers, n_local),

@@ -70,6 +70,14 @@ class SynapseTableSpec:
     cap_headroom: float = 8.0        # event-list size = headroom x mean
     weight_dtype: str = "float32"
     single_shard: bool = False       # 1x1 tiling: drop the (inactive) halo
+    # Minimum expected in-tile fan-out for a halo column to get band
+    # rows; columns below it are dropped at build time (their expected
+    # contribution rounds to nothing, and the rows would be ~all
+    # padding).  Plastic runs set it to 0.0: every stencil-reachable
+    # column must have a slot, because an elastic retile relays the
+    # learned realization by global synapse id and a floor-dropped
+    # column would silently discard learned weights.
+    halo_floor: float = 0.5
 
     # ---- derived geometry ---------------------------------------------
     @property
@@ -138,8 +146,9 @@ class SynapseTableSpec:
         flat = halo_fan.ravel()
         cols_all = np.where(flat >= 0.0)[0]
         f = flat[cols_all]
-        # drop halo columns that project (in expectation) < 0.5 synapses
-        keep = f >= 0.5
+        # drop halo columns below the expected-fan-out floor (with
+        # halo_floor == 0.0, keep every stencil-reachable column)
+        keep = f >= self.halo_floor if self.halo_floor > 0.0 else f > 0.0
         cols_all, f = cols_all[keep], f[keep]
         if len(cols_all) == 0:
             return []

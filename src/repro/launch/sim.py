@@ -62,8 +62,15 @@ def build_driver(args) -> SimDriver:
     dec = TileDecomposition(
         grid=ColumnGrid(*case.grid, case.n_per_column),
         tiles_y=tiles[0], tiles_x=tiles[1], radius=law.radius)
+    stdp = None
+    if args.plastic:
+        from repro.core.stdp import STDPParams
+        overrides = {k: v for k, v in
+                     (("a_plus", args.stdp_a_plus),
+                      ("a_minus", args.stdp_a_minus)) if v is not None}
+        stdp = STDPParams(**overrides)
     dist = DistConfig(engine=EngineConfig(decomp=dec, law=law,
-                                          seed=args.seed))
+                                          seed=args.seed, stdp=stdp))
     last = latest_step(args.ckpt_dir)
     if last is not None and not args.resume:
         raise SystemExit(
@@ -118,6 +125,16 @@ def main(argv=None):
                     help="recorder event capacity per shard per segment "
                          "(default: the no-drop bound; overflow is "
                          "counted, never silent)")
+    ap.add_argument("--plastic", action="store_true",
+                    help="STDP plasticity: weight tables + traces ride "
+                         "the scan carry and every checkpoint, and "
+                         "elastic retiles relay them by global synapse "
+                         "id (a plastic checkpoint only resumes with "
+                         "--plastic and identical STDP parameters)")
+    ap.add_argument("--stdp-a-plus", type=float, default=None,
+                    help="LTP amplitude override (with --plastic)")
+    ap.add_argument("--stdp-a-minus", type=float, default=None,
+                    help="LTD amplitude override (with --plastic)")
     args = ap.parse_args(argv)
 
     driver = build_driver(args)
@@ -125,11 +142,16 @@ def main(argv=None):
     t = int(np.max(np.asarray(out["state"]["t"])))
     rate = driver.firing_rate_hz(out["state"])
     totals = driver.metric_totals(out["state"])
+    plastic = (driver.plastic_summary(out["state"])
+               if driver.plastic else None)
+    extra = (f" plastic_checksum={plastic['weight_checksum'][:12]} "
+             f"w_l1_delta={plastic['w_l1_delta']:.4f}"
+             if plastic else "")
     print(f"final_step={t} preempted={out['preempted']} "
           f"rate_hz={rate:.2f} "
           f"synapses={driver.table_stats['n_synapses']} "
           f"dropped_events={totals['dropped']:.0f} "
-          f"stragglers={len(out['stragglers'])}")
+          f"stragglers={len(out['stragglers'])}" + extra)
     if args.metrics_out:
         d = os.path.dirname(args.metrics_out)
         if d:
@@ -147,6 +169,11 @@ def main(argv=None):
                 "spooled_events": sum(driver.spool.offsets().values()),
                 "recorder_dropped": driver.recorder_dropped,
                 "spool_dir": driver.spool.directory}
+        if plastic is not None:
+            # weight_checksum is tiling-invariant (global synapse ids,
+            # canonical order): CI asserts preempt->resume->retile runs
+            # against an unpreempted reference with it
+            payload["plastic"] = plastic
         with open(args.metrics_out, "w") as f:
             json.dump(payload, f, indent=1)
     return out

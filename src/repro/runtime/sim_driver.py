@@ -26,7 +26,22 @@ driver gives the distributed SNN engine the same operational envelope:
     append-only logs under ``<ckpt_dir>/spool``.  Per-shard spool
     offsets ride in every checkpoint manifest, and every restore
     truncates the logs back to that frontier, so preemption/failure
-    replay yields each event exactly once.
+    replay yields each event exactly once.  The spool is also the
+    *only* per-step spike record the driver keeps: ``spike_counts()``
+    reads it back (the former per-step host dict is gone -- it
+    duplicated the spool and grew without bound on long runs);
+  * **plasticity** (``dist_cfg.engine.stdp`` set): the STDP weight
+    tables and pre/post traces ride in the scan carry
+    (``state["plastic"]``, see ``core.dist_engine``), so every
+    checkpoint snapshots the learned weights alongside the neuron
+    state and a preempted plastic run resumes bit-identically.  Across
+    an elastic retile the *realization itself* is relaid by global
+    (pre, post) synapse id (``core.retile.retile_tables``) -- never
+    re-sampled, which would silently discard all learning.  The
+    checkpoint meta records the STDP parameters (a static checkpoint
+    can never resume plastic, nor across an STDP-parameter change) and
+    ``born_tiles``, the tiling the realization was sampled on, from
+    which any later tiling's table layout is derived deterministically.
 
 The tiling, grid, seed and connectivity law of the saved state ride
 inside each checkpoint's manifest (atomic with the checkpoint), so a
@@ -42,19 +57,24 @@ identical whatever tiling history a run went through.
 
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import os
 from typing import Callable, Dict, Optional
 
 import jax
 import numpy as np
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
 
 from ..checkpoint.store import (checkpoint_meta, latest_step,
-                                restore_checkpoint)
+                                refuse_meta_drift, restore_checkpoint)
 from ..core.dist_engine import (DistConfig, abstract_dist_inputs,
-                                build_dist_tables, dist_shardings,
+                                build_dist_inverse_index, build_dist_tables,
+                                dist_shardings, init_dist_plastic_state,
                                 init_dist_state, make_sim_fn)
-from ..core.retile import retile_config, retile_state
+from ..core.retile import (gather_synapse_stream, retile_config,
+                           retile_plastic, retile_state, retile_tables)
 from .driver import DriverConfig, FaultTolerantLoop, log
 
 METRIC_KEYS = ("spikes", "events", "dropped")
@@ -70,7 +90,8 @@ class SimDriver(FaultTolerantLoop):
 
     ``cfg.ckpt_every`` counts **segments** between checkpoints.
     ``allow_retile=True`` permits resuming a checkpoint written under a
-    different tiling (state is relaid out by global column id).
+    different tiling (state is relaid out by global column id; plastic
+    weight tables by global synapse id).
     ``preempt_after_segments`` deterministically simulates a SIGTERM
     after that many segments (counted in this process) -- the driver
     checkpoints at the segment boundary and exits, exactly like the
@@ -87,7 +108,7 @@ class SimDriver(FaultTolerantLoop):
     """
 
     def __init__(self, cfg: DriverConfig, dist_cfg: DistConfig, mesh,
-                 segment_steps: int, record_spikes: bool = True,
+                 segment_steps: int,
                  allow_retile: bool = False,
                  fault_hook: Optional[Callable] = None,
                  preempt_after_segments: Optional[int] = None,
@@ -99,14 +120,54 @@ class SimDriver(FaultTolerantLoop):
         self.dist_cfg = dist_cfg
         self.mesh = mesh
         self.step_size = segment_steps
-        self.record_spikes = record_spikes
         self.allow_retile = allow_retile
         self.fault_hook = fault_hook
         self._preempt_after = preempt_after_segments
         self._segments_done = 0
         self._state_sh, table_sh = dist_shardings(dist_cfg, mesh)
-        tables, self.table_stats = build_dist_tables(dist_cfg)
+        e = dist_cfg.engine
+        self.plastic = e.stdp is not None
+
+        # ---- synapse tables ------------------------------------------
+        # A plastic realization is *born* on one tiling and relaid to
+        # every later one by global synapse id (re-sampling would build
+        # a different network under the learned weights).  The birth
+        # tiling rides in the checkpoint meta.
+        self._born_tiles = dist_cfg.tiles
+        if self.plastic:
+            last0 = latest_step(cfg.ckpt_dir)
+            if last0 is not None:
+                born = checkpoint_meta(cfg.ckpt_dir, last0).get("born_tiles")
+                if born:
+                    self._born_tiles = tuple(born)
+        self._birth_tables = None
+        if self.plastic and self._born_tiles != dist_cfg.tiles:
+            born_cfg = retile_config(dist_cfg, *self._born_tiles)
+            birth, self.table_stats = build_dist_tables(born_cfg)
+            self._birth_tables = jax.tree.map(np.asarray, birth)
+            tables = retile_tables(
+                self._birth_tables, born_cfg.engine.decomp,
+                born_cfg.engine.spec(), e.decomp, e.spec())
+            self.table_stats = dict(self.table_stats,
+                                    table_bytes_per_shard=e.spec()
+                                    .table_bytes())
+        else:
+            tables, self.table_stats = build_dist_tables(dist_cfg)
+            if self.plastic:
+                self._birth_tables = jax.tree.map(np.asarray, tables)
+        self._tables_host = (jax.tree.map(np.asarray, tables)
+                             if self.plastic else None)
         self.tables = jax.device_put(tables, table_sh)
+        self._inv_slots = None
+        if self.plastic:
+            slots, _ = build_dist_inverse_index(dist_cfg, self._tables_host)
+            self._inv_slots = jax.device_put(
+                slots, NamedSharding(mesh, dist_cfg.pspec(2)))
+            # the birth-weight stream is constant over the driver's
+            # lifetime; gather it once for plastic_summary's drift stats
+            self._birth_stream = gather_synapse_stream(
+                self._tables_host, e.decomp, e.spec())
+
         # cumulative totals not represented in the (possibly retiled)
         # device state -- see module docstring
         self._metric_base = {k: 0.0 for k in METRIC_KEYS}
@@ -115,10 +176,8 @@ class SimDriver(FaultTolerantLoop):
         self.spool = None
         self.recorder_dropped = 0
         if record_events:
-            from jax.sharding import NamedSharding
             from ..obs.record import recorder_spec, stacked_gid_maps
             from ..obs.spool import SpikeSpooler
-            e = dist_cfg.engine
             d = e.decomp
             self.recorder = recorder_spec(e, segment_steps,
                                           capacity=record_capacity)
@@ -133,11 +192,10 @@ class SimDriver(FaultTolerantLoop):
                         "dt_ms": e.lif.dt_ms,
                         "n_neurons": d.grid.n_neurons,
                         "recorder_capacity": self.recorder.capacity})
+        # the driver never consumes the per-step spike output (the
+        # spool is the per-step record), so don't materialize it
         self._sim = make_sim_fn(dist_cfg, mesh, segment_steps,
-                                recorder=self.recorder)
-        # per-step global spike counts keyed by segment start step:
-        # replayed segments overwrite their slot instead of duplicating
-        self._spikes: Dict[int, np.ndarray] = {}
+                                record_rate=False, recorder=self.recorder)
 
     # ---- checkpoint metadata (identity of the saved state) ------------
     def _meta(self) -> dict:
@@ -149,6 +207,10 @@ class SimDriver(FaultTolerantLoop):
                 "law": e.law.kind, "radius": d.radius, "seed": e.seed,
                 "table_realization": TABLE_REALIZATION_VERSION,
                 "segment_steps": self.step_size,
+                "stdp": (dataclasses.asdict(e.stdp)
+                         if self.plastic else None),
+                "born_tiles": (list(self._born_tiles)
+                               if self.plastic else None),
                 "metric_base": dict(self._metric_base)}
 
     def _save(self, step: int, state):
@@ -176,24 +238,37 @@ class SimDriver(FaultTolerantLoop):
             self._metric_base = {k: 0.0 for k in METRIC_KEYS}
             if self.spool is not None:
                 self.spool.truncate({})
-            state = jax.device_put(init_dist_state(self.dist_cfg),
-                                   self._state_sh)
-            return 0, state
+            state = init_dist_state(self.dist_cfg)
+            if self.plastic:
+                state["plastic"] = init_dist_plastic_state(self.dist_cfg,
+                                                           self.tables)
+            return 0, jax.device_put(state, self._state_sh)
         d = self.dist_cfg.engine.decomp
         meta = checkpoint_meta(self.cfg.ckpt_dir, last)
         mine = self._meta()
+        # plasticity identity first: the plastic weight tables live in
+        # the checkpointed state, so a static checkpoint cannot resume
+        # plastic (there are no tables to continue from), a plastic
+        # checkpoint cannot resume static (the learned weights would be
+        # silently replaced by the seed realization), and an STDP
+        # parameter change mid-run is a different model
+        theirs = meta.get("stdp")
+        if theirs != mine["stdp"]:
+            raise ValueError(
+                f"checkpoint in {self.cfg.ckpt_dir} was written with "
+                f"stdp={theirs} but the current config has "
+                f"stdp={mine['stdp']} -- a plastic run resumes only a "
+                "checkpoint with identical STDP parameters, and a "
+                "static run only a static checkpoint")
         # the state relayout is only valid for the *same model*: grid,
         # connectivity law, synapse seed AND sampling-procedure version
         # must match -- same seed under a different table_realization
         # rebuilds a different network (keys absent from older
         # checkpoints are skipped: pre-versioning manifests)
-        for key in ("grid", "law", "radius", "seed", "table_realization"):
-            if key in meta and meta[key] != mine[key]:
-                raise ValueError(
-                    f"checkpoint in {self.cfg.ckpt_dir} was written with "
-                    f"{key}={meta[key]}, current config has "
-                    f"{key}={mine[key]} -- resuming would silently "
-                    "continue a different model")
+        refuse_meta_drift(
+            meta, mine,
+            ("grid", "law", "radius", "seed", "table_realization"),
+            self.cfg.ckpt_dir)
         base = meta.get("metric_base", {})
         self._metric_base = {k: float(base.get(k, 0.0))
                              for k in METRIC_KEYS}
@@ -221,7 +296,26 @@ class SimDriver(FaultTolerantLoop):
             for k in METRIC_KEYS:
                 self._metric_base[k] += float(
                     np.sum(np.asarray(host_state["metrics"][k])))
+            plastic_host = host_state.pop("plastic", None)
             state = retile_state(host_state, old_cfg.engine.decomp, d)
+            if self.plastic:
+                # the checkpointed weights are laid out for the *old*
+                # tiling's structure (itself a deterministic relay of
+                # the birth realization); relay them onward by global
+                # synapse id
+                old_d = old_cfg.engine.decomp
+                old_spec = old_cfg.engine.spec()
+                if old_tiles == self._born_tiles:
+                    old_tabs = self._birth_tables
+                else:
+                    born_cfg = retile_config(self.dist_cfg,
+                                             *self._born_tiles)
+                    old_tabs = retile_tables(
+                        self._birth_tables, born_cfg.engine.decomp,
+                        born_cfg.engine.spec(), old_d, old_spec)
+                state["plastic"] = retile_plastic(
+                    plastic_host, old_tabs, old_d, old_spec, d,
+                    self.dist_cfg.engine.spec())
             state = jax.device_put(state, self._state_sh)
         if self.spool is not None:
             # exactly-once: cut every log back to this checkpoint's
@@ -230,25 +324,23 @@ class SimDriver(FaultTolerantLoop):
             self.recorder_dropped = int(meta.get("recorder_dropped", 0))
         return last, state
 
-    def _on_rewind(self, step: int):
-        super()._on_rewind(step)
-        self._spikes = {k: v for k, v in self._spikes.items() if k < step}
-
     # ---- one segment --------------------------------------------------
     def _step_once(self, state, step):
         if self.fault_hook:
             self.fault_hook(step)
+        args = [state, self.tables]
+        if self.plastic:
+            args.append(self._inv_slots)
         if self.recorder is not None:
-            state, per_step, rec = self._sim(state, self.tables, self._gids)
+            args.append(self._gids)
+            state, _, rec = self._sim(*args)
             self._drain_recorder(rec)
         else:
-            state, per_step = self._sim(state, self.tables)
+            state, _ = self._sim(*args)
         self._segments_done += 1
         if self._preempt_after is not None \
                 and self._segments_done >= self._preempt_after:
             self.preempted = True
-        if self.record_spikes:
-            self._spikes[step] = np.asarray(per_step).sum(axis=(0, 1))
         m = state["metrics"]
         base = self._metric_base
         dropped = base["dropped"] + float(np.asarray(jnp.sum(m["dropped"])))
@@ -300,13 +392,74 @@ class SimDriver(FaultTolerantLoop):
         return self.metric_totals(state)["spikes"] \
             / max(n_active, 1.0) / max(sim_sec, 1e-9)
 
-    def spike_counts(self) -> np.ndarray:
-        """Global per-step spike counts recorded by this process, in sim
-        step order (replayed segments appear once)."""
-        if not self._spikes:
-            return np.zeros((0,), np.float32)
-        return np.concatenate(
-            [self._spikes[k] for k in sorted(self._spikes)])
+    def spike_counts(self, n_steps: Optional[int] = None) -> np.ndarray:
+        """Global per-step spike counts, read back from the spooled
+        spike logs (sim step order; the exactly-once truncation
+        contract guarantees replayed segments appear once).  Covers the
+        whole run recorded into this checkpoint directory -- including
+        segments written by earlier processes of a resumed run.
+
+        ``n_steps`` fixes the returned length (steps past the last
+        spike would otherwise be trimmed).  Requires
+        ``record_events=True``: the spool *is* the per-step record (the
+        former per-step host dict duplicated it and grew unboundedly).
+        """
+        if self.spool is None:
+            raise ValueError(
+                "spike_counts() reads the spike spool; construct the "
+                "driver with record_events=True")
+        from ..obs.spool import RECORD_DTYPE, shard_events
+        self.spool.wait()
+        shards = list(shard_events(self.spool.directory).values())
+        ev = (np.concatenate(shards) if shards
+              else np.empty(0, RECORD_DTYPE))
+        if n_steps is None:
+            n_steps = int(ev["step"].max()) + 1 if len(ev) else 0
+        return np.bincount(ev["step"], minlength=n_steps)[:n_steps] \
+            .astype(np.float32)
+
+    def plastic_summary(self, state) -> dict:
+        """Tiling-invariant digest of the live plastic tables.
+
+        ``weight_checksum`` hashes every synapse's ``(pre_gid,
+        post_gid, dslot, weight-bits)`` record in canonical (sorted)
+        order, so two runs agree iff their learned weights are
+        bit-identical per global synapse -- whatever tilings either
+        went through.  Drift stats compare against the birth weights.
+        """
+        if not self.plastic:
+            raise ValueError("plastic_summary() needs a plastic engine "
+                             "(EngineConfig.stdp set)")
+        e = self.dist_cfg.engine
+        d, spec = e.decomp, e.spec()
+        pl = state["plastic"]
+        live_tabs = {
+            "local": dict(self._tables_host["local"],
+                          w=np.asarray(pl["w"][0])),
+            "halo": [dict(t, w=np.asarray(pw)) for t, pw in
+                     zip(self._tables_host["halo"], pl["w"][1:])],
+        }
+        live = gather_synapse_stream(live_tabs, d, spec)
+        birth = self._birth_stream        # same gather order as `live`
+        w = np.ascontiguousarray(live["w"])
+        wbits = w.view({2: np.uint16, 4: np.uint32,
+                        8: np.uint64}[w.dtype.itemsize])
+        order = np.lexsort((wbits, live["dslot"], live["post"],
+                            live["pre"]))
+        rec = np.column_stack([
+            live["pre"][order], live["post"][order],
+            live["dslot"][order].astype(np.int64),
+            wbits[order].astype(np.int64)]).astype(np.int64)
+        checksum = hashlib.sha256(
+            np.ascontiguousarray(rec).tobytes()).hexdigest()
+        mask = birth["w"] > 0
+        return {
+            "weight_checksum": checksum,
+            "n_synapses": int(len(w)),
+            "n_plastic": int(mask.sum()),
+            "w_sum": float(w.sum()),
+            "w_l1_delta": float(np.abs(w - birth["w"])[mask].sum()),
+        }
 
     def run(self, n_steps: int):
         out = super().run(n_steps)

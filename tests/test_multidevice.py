@@ -170,6 +170,58 @@ print("retile resume OK", rate)
 """, devices=2)
 
 
+def test_sim_driver_plastic_retile_resume(tmp_path):
+    """A plastic run born on 1x2 resumes on 2x1: the learned weight
+    tables are relaid by global (pre, post) synapse id -- bit-identical
+    per synapse (checksum) -- and the run keeps learning on the new
+    tiling."""
+    run_py(f"""
+import numpy as np
+from repro.core.connectivity import gaussian_law
+from repro.core.dist_engine import DistConfig
+from repro.core.engine import EngineConfig
+from repro.core.grid import ColumnGrid, TileDecomposition
+from repro.core.stdp import STDPParams
+from repro.parallel.compat import make_mesh
+from repro.runtime import DriverConfig, SimDriver
+
+def dist(ty, tx):
+    law = gaussian_law()
+    dec = TileDecomposition(grid=ColumnGrid(6, 6, 20), tiles_y=ty,
+                            tiles_x=tx, radius=law.radius)
+    return DistConfig(engine=EngineConfig(decomp=dec, law=law, seed=4,
+                                          stdp=STDPParams()))
+
+ck = {str(tmp_path)!r}
+m12 = make_mesh((1, 2), ("data", "model"))
+d1 = SimDriver(DriverConfig(ckpt_dir=ck, ckpt_every=1,
+                            handle_sigterm=False),
+               dist(1, 2), m12, segment_steps=30)
+out1 = d1.run(60)
+assert out1["final_step"] == 60
+s1 = d1.plastic_summary(out1["state"])
+assert s1["w_l1_delta"] > 0 and s1["n_plastic"] > 0  # learning happened
+
+m21 = make_mesh((2, 1), ("data", "model"))
+d2 = SimDriver(DriverConfig(ckpt_dir=ck, ckpt_every=1,
+                            handle_sigterm=False),
+               dist(2, 1), m21, segment_steps=30, allow_retile=True)
+assert d2._born_tiles == (1, 2)        # birth tiling from checkpoint meta
+start, state = d2._restore_or_init()
+assert start == 60
+s2 = d2.plastic_summary(state)
+# the relay preserved every learned weight bit-exactly per synapse id
+assert s2["weight_checksum"] == s1["weight_checksum"], (s1, s2)
+out2 = d2.run(120)
+assert out2["final_step"] == 120
+s3 = d2.plastic_summary(out2["state"])
+assert s3["w_l1_delta"] >= s2["w_l1_delta"]
+rate = d2.firing_rate_hz(out2["state"])
+assert np.isfinite(rate) and 0.0 <= rate < 200.0
+print("plastic retile OK", rate)
+""", devices=2)
+
+
 def test_moe_ep_equals_dense():
     run_py("""
 import jax, jax.numpy as jnp, numpy as np

@@ -89,24 +89,31 @@ def test_gid_map_is_global_and_tiling_invariant():
 
 
 def test_recording_is_pure_observer(tmp_path):
-    """Recording on/off leaves the engine spike trains (and the full
-    final state) bit-identical -- the recorder is an observer, not a
-    participant."""
+    """Recording on/off leaves the engine dynamics (the full final
+    state) bit-identical -- the recorder is an observer, not a
+    participant -- and the spool's per-step counts (the driver's only
+    per-step record, via ``spike_counts``) match the raw logs and the
+    non-recording run's cumulative totals exactly."""
     off = _driver(tmp_path / "off", seg=10)
     out_off = off.run(N)
     on = _driver(tmp_path / "on", seg=10, record_events=True)
     out_on = on.run(N)
-    np.testing.assert_array_equal(off.spike_counts(), on.spike_counts())
     for a, b in zip(jax.tree.leaves(out_off["state"]),
                     jax.tree.leaves(out_on["state"])):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    counts = on.spike_counts(N)
+    assert counts.shape == (N,) and counts.sum() > 0
+    assert counts.sum() == float(
+        np.asarray(jnp.sum(out_off["state"]["metrics"]["spikes"])))
+    # spike_counts without recording is an error now, not a stale dict
+    with pytest.raises(ValueError, match="record_events"):
+        off.spike_counts()
     # and the spooled log agrees with the per-step counts exactly
     on.spool.close()
     ev = load_events(str(tmp_path / "on"))
-    assert len(ev) == int(off.spike_counts().sum())
+    assert len(ev) == int(counts.sum())
     np.testing.assert_array_equal(
-        np.bincount(ev["step"], minlength=N).astype(np.float32),
-        off.spike_counts())
+        np.bincount(ev["step"], minlength=N).astype(np.float32), counts)
 
 
 def test_single_shard_run_records_events():
