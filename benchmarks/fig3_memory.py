@@ -1,24 +1,59 @@
 """Paper Figure 3: memory occupation in bytes/synapse.
 
 Claim: bytes/synapse is ~flat across connectivity scheme and problem
-size (memory is synapse-dominated).  We compute exact per-shard buffer
-footprints (tables + neuron state + rings) for the paper's six
-configurations over a sweep of shard counts, plus a *measured* check at
-reduced scale where tables actually materialize.
+size (memory is synapse-dominated), and the exponential law's memory
+envelope -- not compute -- sets the maximum problem size.  Every byte
+saved per synapse is a proportionally larger grid per host, so this
+benchmark doubles as the producer of the committed repo-root
+``BENCH_memory.json`` trajectory that ``benchmarks.memory_guard``
+gates in CI.
+
+Accounting covers *everything the engine holds live per shard* (see
+``core.metrics.shard_memory_bytes``): synapse tables sized by their
+``TableStorage`` descriptor, neuron state, delayed-current rings, the
+active mask, and -- where requested -- the STDP carry and the spike
+recorder buffer.  Tables-only numbers are reported alongside for
+comparison with the pre-compression trajectory.
+
+Three sections:
+
+- ``analytic``: per paper case x shard count, dense (pre-compression
+  int32 targets / float32 weights at analytic caps) vs packed (int16
+  targets / bfloat16 weights) bytes/synapse.
+- ``laws`` (measured, 8x8x60 single shard): materialized tables per
+  law; the committed ``compressed.bytes_per_synapse`` is the guard
+  baseline.  ``reduction_vs_dense`` is the acceptance ratio.
+- ``materialized``: a real >= 16x16x60 single-host run (build +
+  ``simulate`` for a few steps) proving the compressed tables hold up
+  at the next grid size, with its measured bytes/synapse.
 """
+
+import dataclasses
 
 import numpy as np
 
-from repro.configs.snn import CASES
-from repro.core.engine import build_shard_tables
+from repro.configs.snn import CASES, reduced_case
+from repro.core.engine import (build_shard_tables, firing_rate_hz,
+                               init_sim_state, simulate)
 from repro.core.grid import ColumnGrid, TileDecomposition
-from repro.core.metrics import bytes_per_synapse
-from repro.core.synapses import SynapseTableSpec
+from repro.core.metrics import bytes_per_synapse, shard_memory_bytes
+from repro.core.synapses import (SynapseTableSpec, TableStorage,
+                                 materialized_table_bytes)
 
 from .common import write_json
 
 
+def dense_storage(spec: SynapseTableSpec) -> TableStorage:
+    """The pre-compression storage layout: int32 target ids, float32
+    weights, analytic (uncompressed) row capacities."""
+    return TableStorage(tgt_dtype="int32", weight_dtype="float32",
+                        cap_local=spec.cap_local,
+                        halo_caps=tuple(spec.band_caps()))
+
+
 def analytic_rows(shard_counts=(16, 64, 256)) -> list:
+    """Dense-vs-packed bytes/synapse for the paper's six configurations
+    over a sweep of shard counts (analytic caps; full accounting)."""
     rows = []
     for name, case in CASES.items():
         law = case.connectivity()
@@ -27,51 +62,126 @@ def analytic_rows(shard_counts=(16, 64, 256)) -> list:
             dec = TileDecomposition(
                 grid=ColumnGrid(*case.grid), tiles_y=ty, tiles_x=n // ty,
                 radius=law.radius)
-            spec = SynapseTableSpec(decomp=dec, law=law)
+            spec = SynapseTableSpec(decomp=dec, law=law,
+                                    weight_dtype="bfloat16")
             rows.append({
                 "case": name, "shards": n,
-                "bytes_per_synapse": round(bytes_per_synapse(spec), 2),
+                "bytes_per_synapse_dense":
+                    round(bytes_per_synapse(spec, dense_storage(spec)), 2),
+                "bytes_per_synapse":
+                    round(bytes_per_synapse(spec), 2),
             })
     return rows
 
 
-def measured_reduced() -> list:
-    """Materialized tables at reduced scale: stats from real buffers."""
+def _full(spec, storage, n_synapses) -> dict:
+    mem = shard_memory_bytes(spec, storage)
+    return {"breakdown": {k: int(v) for k, v in mem.items()},
+            "bytes_per_synapse": round(mem["total"] / n_synapses, 3)}
+
+
+def measured_law(law_name: str, grid: int = 8,
+                 n_per_column: int = 60) -> dict:
+    """Materialized single-shard tables for one law: pre-compression
+    vs compressed bytes/synapse over realized synapse counts."""
+    case = reduced_case(law_name, grid=grid, n_per_column=n_per_column)
+    cfg = case.engine_config(1, 1)
+    spec = cfg.spec()
+    tabs = build_shard_tables(cfg)          # compressed by default
+    n_syn = int(tabs.stats["n_synapses"])
+    dense_st = dense_storage(spec)
+    out = {
+        "case": case.name,
+        "n_synapses": n_syn,
+        # what the pre-compression code measured (tables only, dense):
+        "tables_only": {
+            "dense_bytes": int(spec.table_bytes(dense_st)),
+            "compressed_bytes": int(materialized_table_bytes(tabs)),
+        },
+        "dense": _full(spec, dense_st, n_syn),
+        "compressed": _full(spec, tabs.storage, n_syn),
+        "storage": tabs.storage.meta(),
+    }
+    to = out["tables_only"]
+    to["reduction"] = round(to["dense_bytes"] / to["compressed_bytes"], 3)
+    out["reduction_vs_dense"] = round(
+        out["dense"]["bytes_per_synapse"]
+        / out["compressed"]["bytes_per_synapse"], 3)
+    # STDP adds a weight-tier carry + traces + inverse index; plastic
+    # specs force float32 weights and halo_floor=0, so account on the
+    # plastic spec, not this one.
+    pspec = dataclasses.replace(spec, weight_dtype="float32",
+                                halo_floor=0.0)
+    pmem = shard_memory_bytes(pspec, plastic=True)
+    out["plastic_analytic"] = {
+        "breakdown": {k: int(v) for k, v in pmem.items()},
+        "bytes_per_synapse": round(
+            pmem["total"] / pspec.expected_synapses(), 3),
+    }
+    return out
+
+
+def measured_materialized(grid: int = 16, n_per_column: int = 60,
+                          steps: int = 20) -> list:
+    """Build + run a real single-host simulation at ``grid`` (>= 2x the
+    8x8 acceptance config in columns): proof the compressed tables
+    materialize and deliver at the next problem size."""
     out = []
     for law_name in ("gaussian", "exponential"):
-        from repro.configs.snn import reduced_case
-        case = reduced_case(law_name, grid=8, n_per_column=60)
-        cfg = case.engine_config(1, 1)
+        case = reduced_case(law_name, grid=grid, n_per_column=n_per_column)
+        cfg = case.engine_config(1, 1, use_kernels=False)
+        spec = cfg.spec()
         tabs = build_shard_tables(cfg)
+        state = init_sim_state(cfg)
+        state, _ = simulate(state, tabs, cfg, steps)
+        n_syn = int(tabs.stats["n_synapses"])
+        mem = shard_memory_bytes(spec, tabs.storage)
         out.append({
             "case": case.name,
-            "n_synapses": tabs["stats"]["n_synapses"],
-            "bytes_per_synapse":
-                round(tabs["stats"]["bytes_per_synapse"], 2),
+            "steps": steps,
+            "completed": True,
+            "rate_hz": round(float(firing_rate_hz(state, cfg)), 3),
+            "n_synapses": n_syn,
+            "table_bytes": int(materialized_table_bytes(tabs)),
+            "bytes_per_synapse": round(mem["total"] / n_syn, 3),
+            "storage": tabs.storage.meta(),
         })
     return out
 
 
-def run_bench() -> dict:
+def run_bench(update_root: bool = False,
+              include_materialized: bool = True,
+              materialized_grid: int = 16) -> dict:
+    laws = {law: measured_law(law) for law in ("gaussian", "exponential")}
     rows = analytic_rows()
     vals = [r["bytes_per_synapse"] for r in rows]
-    flatness = float(np.std(vals) / np.mean(vals))
-    out = {"analytic": rows, "measured_reduced": measured_reduced(),
-           "mean_bytes_per_synapse": float(np.mean(vals)),
-           "rel_std": flatness}
-    write_json("fig3.json", out)
+    out = {
+        "config": "8x8x60",
+        "laws": laws,
+        "analytic": rows,
+        "mean_bytes_per_synapse": float(np.mean(vals)),
+        "rel_std": float(np.std(vals) / np.mean(vals)),
+        "reference": ("paper Fig. 3: ~flat bytes/synapse across configs; "
+                      "the exponential law's memory envelope bounds the "
+                      "maximum problem size"),
+    }
+    if include_materialized:
+        out["materialized"] = measured_materialized(grid=materialized_grid)
+    write_json("BENCH_memory.json", out, also_root=update_root)
     return out
 
 
 def main():
-    out = run_bench()
-    for r in out["analytic"]:
-        print(f"{r['case']:28s} shards={r['shards']:4d} "
-              f"{r['bytes_per_synapse']:6.2f} B/syn")
-    for r in out["measured_reduced"]:
-        print(f"{r['case']:28s} measured  {r['bytes_per_synapse']:6.2f} "
-              f"B/syn ({r['n_synapses']} syn)")
-    print(f"mean {out['mean_bytes_per_synapse']:.1f} B/syn, "
+    out = run_bench(update_root=False)
+    for law, m in out["laws"].items():
+        print(f"{m['case']:28s} dense {m['dense']['bytes_per_synapse']:6.2f}"
+              f" -> compressed {m['compressed']['bytes_per_synapse']:6.2f}"
+              f" B/syn  ({m['reduction_vs_dense']:.2f}x, "
+              f"{m['n_synapses']} syn)")
+    for r in out.get("materialized", []):
+        print(f"{r['case']:28s} materialized run: {r['steps']} steps, "
+              f"{r['rate_hz']:.2f} Hz, {r['bytes_per_synapse']:6.2f} B/syn")
+    print(f"analytic mean {out['mean_bytes_per_synapse']:.1f} B/syn, "
           f"rel std {out['rel_std']:.1%} (paper: ~flat across configs)")
 
 

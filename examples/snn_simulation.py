@@ -17,8 +17,8 @@ import numpy as np
 from repro.configs.snn import reduced_case
 from repro.core.dist_engine import DistConfig, simulate
 from repro.core.engine import (EngineConfig, build_shard_tables,
-                               init_plasticity, init_sim_state,
-                               run_plastic)
+                               init_plasticity, init_sim_state)
+from repro.core.engine import simulate as engine_simulate
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.stdp import STDPParams
 from repro.launch.mesh import make_host_mesh
@@ -67,7 +67,7 @@ def main():
     aux = init_plasticity(tabs, cfg)
     w0 = np.asarray(tabs["local"]["w"]).copy()
     (st, tabs2, _), _ = jax.jit(
-        lambda s, t: run_plastic(s, t, aux, cfg, 150))(
+        lambda s, t: engine_simulate(s, t, cfg, 150, plasticity=aux))(
         init_sim_state(cfg), tabs)
     w1 = np.asarray(tabs2["local"]["w"])
     moved = np.abs(w1 - w0)[w0 > 0]

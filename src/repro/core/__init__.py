@@ -7,10 +7,11 @@ from .connectivity import (ConnectivityLaw, exponential_law, gaussian_law,
                            expected_synapse_counts)
 from .grid import ColumnGrid, TileDecomposition, choose_tiling
 from .neuron import LIFParams, init_state, lif_sfa_step
-from .synapses import SynapseTableSpec, build_tables
+from .synapses import (EntryGeometry, SynapseTables, SynapseTableSpec,
+                       TableStorage, TierPlan, build_tables, compress_tables)
 from .engine import (EngineConfig, init_sim_state, build_shard_tables, run,
                      run_plastic, init_plasticity, firing_rate_hz)
-from .dist_engine import DistConfig, make_sim_fn, simulate
+from .dist_engine import DistConfig, SimInputs, make_sim_fn, simulate
 from .retile import retile_config, retile_state
 from .stdp import STDPParams
 from . import metrics

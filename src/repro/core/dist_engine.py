@@ -24,7 +24,7 @@ is local.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple, Union
+from typing import Any, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +35,35 @@ from .engine import (EngineConfig, deliver_event_tiers, external_drive,
                      init_sim_state)
 from .halo import exchange_halo_2d, pack_bits, unpack_bits
 from .neuron import lif_sfa_step
-from .synapses import build_tables, deliver_gather_all
+from .synapses import (SynapseTables, TableStorage, build_tables,
+                       compress_tables, deliver_gather_all)
 
 AxisName = Union[str, Tuple[str, ...]]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SimInputs:
+    """The non-donated inputs of the distributed sim function, named.
+
+    ``make_sim_fn``'s second argument: synapse ``tables`` always,
+    ``inv_slots`` (the stacked target-major inverse index) when the
+    engine is plastic, ``gids`` (the stacked global-neuron-id maps)
+    when a recorder is attached.  Replaces the old positional
+    ``sim(state, tables[, inv_slots][, gids])`` sprawl -- unused fields
+    stay ``None`` and vanish from the pytree, so sharding/in_specs
+    trees built with the same ``None``s always line up.
+    """
+    tables: Any
+    inv_slots: Any = None
+    gids: Any = None
+
+    def tree_flatten(self):
+        return (self.tables, self.inv_slots, self.gids), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,30 +108,47 @@ def init_dist_state(cfg: DistConfig) -> dict:
     return st
 
 
-def build_dist_tables(cfg: DistConfig) -> dict:
-    """Materialize all shards' synapse tables stacked on (TY, TX)."""
+def build_dist_tables(cfg: DistConfig,
+                      compress: bool = True) -> Tuple[SynapseTables, dict]:
+    """Materialize all shards' synapse tables stacked on (TY, TX).
+
+    Per-shard builds happen at the analytic caps (identical shapes, so
+    stacking is trivial), then ``compress_tables`` truncates the
+    all-padding trailing columns jointly across shards -- the realized
+    caps are cross-shard maxima, so the compressed storage descriptor
+    is identical on every shard (SPMD-safe).
+    """
     ty, tx = cfg.tiles
     e = cfg.engine
     tabs = [[build_tables(e.spec(), y, x, j_exc=e.lif.j_exc_mv,
                           j_inh=e.lif.j_inh_mv, seed=e.seed)
              for x in range(tx)] for y in range(ty)]
-    stats = [[tabs[y][x].pop("stats") for x in range(tx)] for y in range(ty)]
+    stats = [[tabs[y][x].stats for x in range(tx)] for y in range(ty)]
 
     def stack_tree(trees):
         return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
 
     rows = [stack_tree([tabs[y][x] for x in range(tx)]) for y in range(ty)]
     out = stack_tree(rows)
+    if compress:
+        out = compress_tables(out)
+    from .synapses import materialized_table_bytes
     out_stats = {
         "n_synapses": int(sum(s["n_synapses"] for r in stats for s in r)),
         "clipped": int(sum(s["clipped"] for r in stats for s in r)),
-        "table_bytes_per_shard": stats[0][0]["table_bytes"],
+        "table_bytes_per_shard": materialized_table_bytes(out, ty * tx),
     }
     return out, out_stats
 
 
-def abstract_dist_inputs(cfg: DistConfig):
+def abstract_dist_inputs(cfg: DistConfig,
+                         storage: Optional[TableStorage] = None):
     """ShapeDtypeStructs for (state, tables) -- dry-run inputs, no alloc.
+
+    ``storage``: the materialized tables' storage descriptor.  Leave it
+    ``None`` for the spec's analytic (uncompressed) layout -- the
+    dry-run case; pass ``tables.storage`` when shapes must match
+    compressed tables (shardings, checkpoint restore).
 
     When the engine is plastic (``cfg.engine.stdp`` set) the state grows
     a ``plastic`` subtree -- per-tier synaptic weights plus the STDP
@@ -135,9 +178,9 @@ def abstract_dist_inputs(cfg: DistConfig):
                     "events": sd((), jnp.float32),
                     "dropped": sd((), jnp.float32)},
     }
-    abst = spec.abstract_tables()
+    abst = spec.abstract_tables(storage)
     if e.stdp is not None:
-        tiers = [abst["local"]] + list(abst["halo"])
+        tiers = abst.tiers()
         state["plastic"] = {
             "w": [sd(t["w"].shape, t["w"].dtype) for t in tiers],
             "x_pre": [sd((t["tgt"].shape[0],), jnp.float32)
@@ -149,8 +192,8 @@ def abstract_dist_inputs(cfg: DistConfig):
         return {k: jax.ShapeDtypeStruct((ty, tx) + v.shape, v.dtype)
                 for k, v in t.items()}
 
-    tables = {"local": lift(abst["local"]),
-              "halo": [lift(t) for t in abst["halo"]]}
+    tables = SynapseTables(lift(abst.local),
+                           [lift(t) for t in abst.halo], abst.storage)
     return state, tables
 
 
@@ -208,9 +251,14 @@ def build_dist_inverse_index(cfg: DistConfig, tables: dict):
     return jnp.asarray(stacked), aux
 
 
-def dist_shardings(cfg: DistConfig, mesh: Mesh):
-    """NamedSharding pytrees matching ``abstract_dist_inputs``."""
-    state, tables = abstract_dist_inputs(cfg)
+def dist_shardings(cfg: DistConfig, mesh: Mesh,
+                   storage: Optional[TableStorage] = None):
+    """NamedSharding pytrees matching ``abstract_dist_inputs``.
+
+    Pass the materialized tables' ``storage`` so the table sharding
+    tree shares the compressed tables' treedef (the descriptor is the
+    pytree's static aux data)."""
+    state, tables = abstract_dist_inputs(cfg, storage)
 
     def shard(leaf):
         return NamedSharding(mesh, cfg.pspec(len(leaf.shape) - 2))
@@ -223,13 +271,22 @@ def dist_shardings(cfg: DistConfig, mesh: Mesh):
 # ---------------------------------------------------------------------------
 
 def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
-                record_rate: bool = True, recorder=None):
+                record_rate: bool = True, recorder=None,
+                storage: Optional[TableStorage] = None):
     """Build the jitted multi-shard simulation function.
 
-    Returns ``sim(state, tables) -> (state, per_step_spikes (TY,TX,S))``.
+    Returns ``sim(state, inputs) -> (state, per_step_spikes (TY,TX,S))``
+    where ``inputs`` is a ``SimInputs`` pytree (``tables`` always,
+    ``inv_slots`` for plastic engines, ``gids`` when recording).
     The whole ``n_steps`` scan runs inside one ``shard_map`` call so the
     halo exchanges appear as ``collective-permute`` ops inside the scan
     body -- one lowered program, n_steps iterations, no per-step dispatch.
+
+    ``storage``: the tables' storage descriptor.  Defaults to the
+    spec's analytic layout; pass ``tables.storage`` when driving
+    compressed tables (``build_dist_tables`` output) so the delivery
+    plan, the plastic weight shapes, and the shard_map in_specs all
+    size against the materialized caps.
 
     The state argument is **donated**: callers must rebind to the
     returned state and drop every other reference.  For arbitrarily long
@@ -252,18 +309,16 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
 
     **Plasticity** (``cfg.engine.stdp`` set): the STDP weight tables
     and pre/post trace arrays join the scan carry as
-    ``state["plastic"]`` (see ``abstract_dist_inputs``) and the
-    signature grows an ``inv_slots`` argument -- the stacked per-shard
-    target-major inverse index from ``build_dist_inverse_index`` --
-    between ``tables`` and ``gids``.  Delivery then reads weights from
-    the carry (the ``tables`` argument supplies structure and the
-    build-time weights that fix the plastic mask), and every step ends
-    with a halo-aware ``stdp_step`` over all tiers: cross-tile synapses
-    depress from the halo spike vectors the delivery consumed and
-    potentiate through the inverse index, with per-band halo pre-traces
-    that track each remote source exactly like its home shard does.
-
-    Full signature order: ``sim(state, tables[, inv_slots][, gids])``.
+    ``state["plastic"]`` (see ``abstract_dist_inputs``) and
+    ``inputs.inv_slots`` must carry the stacked per-shard target-major
+    inverse index from ``build_dist_inverse_index``.  Delivery then
+    reads weights from the carry (``inputs.tables`` supplies structure
+    and the build-time weights that fix the plastic mask), and every
+    step ends with a halo-aware ``stdp_step`` over all tiers:
+    cross-tile synapses depress from the halo spike vectors the
+    delivery consumed and potentiate through the inverse index, with
+    per-band halo pre-traces that track each remote source exactly
+    like its home shard does.
     """
     e = cfg.engine
     spec = e.spec()
@@ -276,12 +331,12 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
     # Hoisted: the static lane-packed delivery sizing the kernel layer
     # compiles against (recomputing it per scan trace re-runs the
     # numpy fan-out analysis behind halo_bands()).
-    plan = spec.delivery_plan() if e.mode == "event" else None
+    plan = spec.delivery_plan(storage) if e.mode == "event" else None
     plastic = e.stdp is not None
     if plastic:
         from .stdp import _tier_sizes
-        abst = spec.abstract_tables()
-        inv_bases, inv_sizes = _tier_sizes([abst["local"]] + abst["halo"])
+        abst = spec.abstract_tables(storage)
+        inv_bases, inv_sizes = _tier_sizes(abst.tiers())
         inv_total = (int(inv_bases[-1] + inv_sizes[-1])
                      if len(inv_sizes) else 0)
         pre_caps = [spec.active_cap_local] \
@@ -354,30 +409,28 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
                                     "x_post": traces["x_post"]}
         return new_state, spikes
 
+    abs_state, abs_tables = abstract_dist_inputs(cfg, storage)
     state_sp = jax.tree.map(
-        lambda leaf: cfg.pspec(len(leaf.shape) - 2),
-        abstract_dist_inputs(cfg)[0])
+        lambda leaf: cfg.pspec(len(leaf.shape) - 2), abs_state)
     table_sp = jax.tree.map(
-        lambda leaf: cfg.pspec(len(leaf.shape) - 2),
-        abstract_dist_inputs(cfg)[1])
+        lambda leaf: cfg.pspec(len(leaf.shape) - 2), abs_tables)
 
     from ..parallel.compat import shard_map
 
     if recorder is not None:
         from ..obs.record import init_recorder_state, record_step
 
-    def shard_body(state_blk, tables_blk, *extra):
+    def shard_body(state_blk, inputs_blk):
         state = jax.tree.map(lambda a: a[0, 0], state_blk)
-        tables = jax.tree.map(lambda a: a[0, 0], tables_blk)
-        extra = list(extra)
+        tables = jax.tree.map(lambda a: a[0, 0], inputs_blk.tables)
         masks = inv = None
         if plastic:
             from .stdp import plastic_masks
-            inv = {"slots": extra.pop(0)[0, 0], "bases": inv_bases,
+            inv = {"slots": inputs_blk.inv_slots[0, 0], "bases": inv_bases,
                    "sizes": inv_sizes, "total": inv_total}
             masks = plastic_masks([tables["local"]] + list(tables["halo"]))
         if recorder is not None:
-            gids = extra.pop(0)[0, 0]
+            gids = inputs_blk.gids[0, 0]
 
             def body(carry, _):
                 st, rec = carry
@@ -402,11 +455,11 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
             out += (jax.tree.map(lift, rec),)
         return out
 
-    in_specs = [state_sp, table_sp]
-    if plastic:
-        in_specs.append(cfg.pspec(2))                  # inverse-index slots
-    if recorder is not None:
-        in_specs.append(cfg.pspec(1))                  # gid maps
+    inputs_sp = SimInputs(
+        tables=table_sp,
+        inv_slots=cfg.pspec(2) if plastic else None,   # inverse-index slots
+        gids=cfg.pspec(1) if recorder is not None else None)  # gid maps
+    in_specs = [state_sp, inputs_sp]
     out_specs = [state_sp, cfg.pspec(1) if record_rate else None]
     if recorder is not None:
         out_specs.append(jax.tree.map(lambda leaf: cfg.pspec(leaf.ndim),
@@ -433,20 +486,22 @@ def simulate(cfg: DistConfig, mesh: Mesh, n_steps: int, timed: bool = False):
             "--plastic)")
     state = init_dist_state(cfg)
     tables, stats = build_dist_tables(cfg)
-    sharding_state, sharding_tables = dist_shardings(cfg, mesh)
+    sharding_state, sharding_tables = dist_shardings(cfg, mesh,
+                                                     tables.storage)
     state = jax.device_put(state, sharding_state)
     tables = jax.device_put(tables, sharding_tables)
-    sim = make_sim_fn(cfg, mesh, n_steps)
+    sim = make_sim_fn(cfg, mesh, n_steps, storage=tables.storage)
+    inputs = SimInputs(tables=tables)
     elapsed = None
     # ``sim`` donates its state argument (donate_argnums=(0,)): always
     # rebind to the returned state and keep no other reference, or a
     # later read would touch a donated buffer.
-    state, per_step = sim(state, tables)
+    state, per_step = sim(state, inputs)
     if timed:
         jax.block_until_ready(per_step)
         before = float(jnp.sum(state["metrics"]["events"]))
         t0 = time.perf_counter()
-        state, per_step = sim(state, tables)
+        state, per_step = sim(state, inputs)
         jax.block_until_ready(per_step)
         elapsed = time.perf_counter() - t0
     n_active = float(jnp.sum(state["active"]))

@@ -28,8 +28,9 @@ from .connectivity import (ConnectivityLaw, EXTERNAL_RATE_HZ,
                            EXTERNAL_SYNAPSES)
 from .grid import TileDecomposition
 from .neuron import LIFParams, init_state, lif_sfa_step
-from .synapses import (SynapseTableSpec, build_tables, deliver_events,
-                       deliver_gather_all)
+from .synapses import (SynapseTableSpec, SynapseTables, build_tables,
+                       compress_tables, deliver_events, deliver_gather_all,
+                       with_local_tier)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,7 +45,13 @@ class EngineConfig:
     rate_cap_hz: float = 100.0
     cap_headroom: float = 8.0        # event-list sizing (perf knob)
     seed: int = 0
-    weight_dtype: str = "float32"
+    # Weight *storage* dtype.  bfloat16 by default: sampled weights are
+    # quantized to this dtype at build time (realization v3) and cast
+    # up to float32 before any delivery arithmetic, so event delivery
+    # is bit-identical to a float32 copy of the same tables while the
+    # weight array -- the largest memory term after target ids --
+    # halves.  Plastic runs override to float32 (see ``spec()``).
+    weight_dtype: str = "bfloat16"
     # Pallas kernel routing for LIF + event delivery:
     #   "auto" (default) -- kernels everywhere: compiled on TPU,
     #       interpret-mode on CPU/GPU so every environment exercises the
@@ -68,13 +75,18 @@ class EngineConfig:
         single = self.decomp.tiles_y == 1 and self.decomp.tiles_x == 1
         # plastic runs keep band rows for every stencil-reachable halo
         # column (floor 0.0): the learned realization must relay across
-        # tilings without a floor-dropped column orphaning its weights
+        # tilings without a floor-dropped column orphaning its weights.
+        # They also force float32 weights: STDP increments (a_plus ~
+        # 5e-3 of j_exc) fall below the bfloat16 ulp at typical weight
+        # magnitudes and would silently round away.
+        plastic = self.stdp is not None
         return SynapseTableSpec(
             decomp=self.decomp, law=self.law, d_ring=self.d_ring,
             dt_ms=self.lif.dt_ms, rate_cap_hz=self.rate_cap_hz,
             cap_headroom=self.cap_headroom,
-            weight_dtype=self.weight_dtype, single_shard=single,
-            halo_floor=0.0 if self.stdp is not None else 0.5)
+            weight_dtype="float32" if plastic else self.weight_dtype,
+            single_shard=single,
+            halo_floor=0.0 if plastic else 0.5)
 
 
 def init_sim_state(cfg: EngineConfig, tile_y: int = 0, tile_x: int = 0,
@@ -102,10 +114,20 @@ def init_sim_state(cfg: EngineConfig, tile_y: int = 0, tile_x: int = 0,
 
 
 def build_shard_tables(cfg: EngineConfig, tile_y: int = 0,
-                       tile_x: int = 0) -> dict:
+                       tile_x: int = 0,
+                       compress: bool = True) -> SynapseTables:
+    """Materialize (and by default compress) one shard's tables.
+
+    Compression truncates all-padding trailing columns per tier
+    (value-exact; see ``synapses.compress_tables``).  The returned
+    tables carry the realized ``storage`` descriptor -- pass it to
+    anything that sizes launches from the spec (``delivery_plan``,
+    ``make_sim_fn``, shardings).
+    """
     spec = cfg.spec()
-    return build_tables(spec, tile_y, tile_x, j_exc=cfg.lif.j_exc_mv,
+    tabs = build_tables(spec, tile_y, tile_x, j_exc=cfg.lif.j_exc_mv,
                         j_inh=cfg.lif.j_inh_mv, seed=cfg.seed)
+    return compress_tables(tabs) if compress else tabs
 
 
 def external_drive(rng_key, n_local: int, cfg: EngineConfig):
@@ -129,23 +151,24 @@ def deliver_event_tiers(tables, spikes, halo_band_spikes, spec, i_ring,
     the XLA path loops ``deliver_events`` per tier.  Returns (i_ring,
     events, dropped) as f32 scalars.
     """
-    plan = spec.delivery_plan() if plan is None else plan
+    if plan is None:
+        plan = spec.delivery_plan(getattr(tables, "storage", None))
     halo = list(zip(plan[1:], tables["halo"], halo_band_spikes))
     if kernels_enabled:
         from ..kernels import ops as kops
-        tiers = [(tables["local"], spikes, plan[0]["active_cap"])]
-        tiers += [(tab, spk, p["active_cap"]) for p, tab, spk in halo]
+        tiers = [(tables["local"], spikes, plan[0].active_cap)]
+        tiers += [(tab, spk, p.active_cap) for p, tab, spk in halo]
         i_ring, ev, dr = kops.synaptic_accum_banded(
             tiers, i_ring, slot, d_ring, plan=plan)
         return i_ring, ev.astype(jnp.float32), dr.astype(jnp.float32)
     i_ring, ev, dr = deliver_events(
         tables["local"], spikes, i_ring, slot, d_ring,
-        plan[0]["active_cap"])
+        plan[0].active_cap)
     ev = ev.astype(jnp.float32)
     dr = dr.astype(jnp.float32)
     for p, tab, spk in halo:
         i_ring, ev_b, dr_b = deliver_events(
-            tab, spk, i_ring, slot, d_ring, p["active_cap"])
+            tab, spk, i_ring, slot, d_ring, p.active_cap)
         ev = ev + ev_b.astype(jnp.float32)
         dr = dr + dr_b.astype(jnp.float32)
     return i_ring, ev, dr
@@ -161,7 +184,8 @@ def step(state: dict, tables: dict, cfg: EngineConfig,
     """
     spec = cfg.spec()
     n_local = spec.n_local
-    plan = spec.delivery_plan() if cfg.mode == "event" else None
+    plan = (spec.delivery_plan(getattr(tables, "storage", None))
+            if cfg.mode == "event" else None)
     key, k_ext = jax.random.split(state["rng"])
     slot = state["t"] % cfg.d_ring
 
@@ -211,16 +235,32 @@ def step(state: dict, tables: dict, cfg: EngineConfig,
     return new_state, spikes
 
 
-def run(state: dict, tables: dict, cfg: EngineConfig, n_steps: int,
-        record_spikes: bool = False, recorder=None):
+def simulate(state: dict, tables, cfg: EngineConfig, n_steps: int,
+             plasticity: Optional[dict] = None,
+             record_spikes: bool = False, recorder=None):
     """Scan ``n_steps`` of single-shard simulation (no halo sources).
 
-    ``recorder``: optional ``obs.record.RecorderSpec`` -- when given,
-    every spike is also appended as a ``(sim_step, global_neuron_id)``
-    event to a bounded buffer carried through the scan, and the return
-    becomes ``(state, out, recorder_state)``.  Recording is a pure
-    observer: the spike trains are bit-identical with it on or off.
+    The one entry point for both static and plastic runs:
+
+      - ``plasticity=None`` (static): returns ``(state, out)`` where
+        ``out`` is the per-step spike count, or the full spike raster
+        with ``record_spikes=True``.
+      - ``plasticity=init_plasticity(tables, cfg)``: STDP is applied
+        each step and the synapse tables join the scan carry; returns
+        ``((state, tables, traces), per_step_spike_counts)``.
+
+    ``recorder``: optional ``obs.record.RecorderSpec`` (static runs
+    only) -- when given, every spike is also appended as a
+    ``(sim_step, global_neuron_id)`` event to a bounded buffer carried
+    through the scan, and the return becomes ``(state, out,
+    recorder_state)``.  Recording is a pure observer: the spike trains
+    are bit-identical with it on or off.
     """
+    if plasticity is not None:
+        if recorder is not None or record_spikes:
+            raise ValueError("plastic runs do not support recorder/"
+                             "record_spikes (use the distributed driver)")
+        return _run_plastic(state, tables, plasticity, cfg, n_steps)
     if recorder is not None:
         from ..obs.record import (init_recorder_state, record_step,
                                   tile_gid_map)
@@ -246,8 +286,21 @@ def run(state: dict, tables: dict, cfg: EngineConfig, n_steps: int,
     return jax.lax.scan(body, state, None, length=n_steps)
 
 
-def run_plastic(state: dict, tables: dict, stdp_aux: dict,
+def run(state: dict, tables, cfg: EngineConfig, n_steps: int,
+        record_spikes: bool = False, recorder=None):
+    """Deprecated alias for ``simulate(...)`` (static run)."""
+    return simulate(state, tables, cfg, n_steps,
+                    record_spikes=record_spikes, recorder=recorder)
+
+
+def run_plastic(state: dict, tables, stdp_aux: dict,
                 cfg: EngineConfig, n_steps: int):
+    """Deprecated alias for ``simulate(..., plasticity=stdp_aux)``."""
+    return simulate(state, tables, cfg, n_steps, plasticity=stdp_aux)
+
+
+def _run_plastic(state: dict, tables, stdp_aux: dict,
+                 cfg: EngineConfig, n_steps: int):
     """Scan with STDP enabled: synapse tables join the carry.
 
     ``stdp_aux`` comes from ``init_plasticity`` (inverse index, masks,
@@ -271,7 +324,7 @@ def run_plastic(state: dict, tables: dict, stdp_aux: dict,
             [tabs["local"]], masks, stdp_aux["inv"], traces,
             [spikes], spikes, cfg.stdp,
             [spec.active_cap_local], spec.active_cap_local)
-        tabs = dict(tabs, local=tiers[0])
+        tabs = with_local_tier(tabs, tiers[0])
         return (new_state, tabs, traces), jnp.sum(spikes)
 
     return jax.lax.scan(body, (state, tables, traces_init), None,

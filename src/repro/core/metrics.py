@@ -53,21 +53,56 @@ def time_fn(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
 # Memory accounting (paper Fig. 3: bytes / synapse)
 # ---------------------------------------------------------------------------
 
-def shard_memory_bytes(spec: SynapseTableSpec) -> dict:
-    """Exact per-shard buffer bytes (tables + neuron state + rings)."""
+def shard_memory_bytes(spec: SynapseTableSpec, storage=None,
+                       plastic: bool = False,
+                       recorder_capacity: int = 0) -> dict:
+    """Exact per-shard buffer bytes of everything the engine holds live.
+
+    ``storage`` (a ``TableStorage``) sizes the synapse tables -- pass a
+    materialized (compressed) descriptor to account realized caps and
+    narrow dtypes; ``None`` uses the spec's analytic storage.  With
+    ``plastic=True`` the STDP carry is added: the weight tier copy that
+    rides in the scan state, the per-source-row pre-traces, per-target
+    post-traces, and the inverse (target -> synapse slot) index
+    (``cap_pad=1.3`` over the mean in-degree, as built by
+    ``core.stdp.build_inverse_index``).  ``recorder_capacity`` adds the
+    spike observatory's per-segment event buffer (step + gid per slot,
+    plus count/dropped scalars)."""
+    from .synapses import np_dtype
     n_local = spec.n_local
-    table = spec.table_bytes()
+    if storage is None:
+        storage = spec.storage()
+    table = spec.table_bytes(storage)
     neuron = n_local * (4 + 4 + 4)          # v, c, refrac
     ring = spec.d_ring * n_local * 4        # delayed-current ring
     active = n_local * 1
-    return {"tables": table, "neuron_state": neuron, "ring": ring,
-            "active_mask": active,
-            "total": table + neuron + ring + active}
+    out = {"tables": table, "neuron_state": neuron, "ring": ring,
+           "active_mask": active}
+    if plastic:
+        w_item = np_dtype(storage.weight_dtype).itemsize
+        rows = sum(p.rows + 1 for p in spec.delivery_plan(storage))
+        caps = storage.caps()
+        w_carry = sum((p.rows + 1) * c * w_item
+                      for p, c in zip(spec.delivery_plan(storage), caps))
+        mean_in = spec.expected_synapses() / max(n_local, 1)
+        inv_cap = int(np.ceil(1.3 * mean_in))
+        out["plastic"] = (w_carry              # weight tiers in the carry
+                          + rows * 4           # pre-traces (one per row)
+                          + n_local * 4        # post-traces
+                          + n_local * inv_cap * 4)  # inverse index slots
+    if recorder_capacity:
+        out["recorder"] = recorder_capacity * (4 + 4) + 8
+    out["total"] = sum(out.values())
+    return out
 
 
-def bytes_per_synapse(spec: SynapseTableSpec) -> float:
-    """Analytic bytes/synapse of one interior shard (paper Fig. 3)."""
-    mem = shard_memory_bytes(spec)
+def bytes_per_synapse(spec: SynapseTableSpec, storage=None,
+                      **kw) -> float:
+    """Analytic bytes/synapse of one interior shard (paper Fig. 3).
+
+    Counts *all* live per-shard buffers (see ``shard_memory_bytes``),
+    not just the synapse tables."""
+    mem = shard_memory_bytes(spec, storage, **kw)
     return mem["total"] / max(spec.expected_synapses(), 1.0)
 
 

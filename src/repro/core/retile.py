@@ -239,8 +239,12 @@ def gather_synapse_stream(tables: dict, d: TileDecomposition,
                else np.empty(0, dtype or np.int64))
         return out
 
+    # weights travel as float32 regardless of the storage dtype (the
+    # cast is value-exact under the v3 sampling-time quantization), so
+    # canonical stream digests are storage-format invariant
     stream = {"pre": cat(pres), "post": cat(posts),
-              "w": cat(ws, np.float32), "dslot": cat(ds, np.int8)}
+              "w": cat(ws, np.float32).astype(np.float32),
+              "dslot": cat(ds, np.int8)}
     if len(stream["pre"]) and (stream["pre"].min() < 0
                                or stream["post"].min() < 0):
         raise ValueError("synapse stream references a padded (non-"
@@ -248,19 +252,30 @@ def gather_synapse_stream(tables: dict, d: TileDecomposition,
     return stream
 
 
-def pack_synapse_stream(stream: dict, d: TileDecomposition, spec) -> dict:
+def pack_synapse_stream(stream: dict, d: TileDecomposition, spec,
+                        storage=None):
     """Pack a global synapse stream into ``d``'s stacked table layout.
 
+    ``storage``: target ``TableStorage``; defaults to the spec's
+    analytic descriptor.  Pass a compressed descriptor to pack straight
+    into truncated caps (safe whenever the stream is the relay of a
+    realization those caps were derived from -- relaying preserves
+    per-row occupancy exactly).
+
     Refuses (raises) rather than drops: a row whose relaid synapse
-    count exceeds the new tiling's analytic capacity, or a pre column
-    falling below the new tiling's halo-band fan-out floor, would
-    silently lose learned weights.
+    count exceeds the target capacity, or a pre column falling below
+    the new tiling's halo-band fan-out floor, would silently lose
+    learned weights.
     """
+    from .synapses import SynapseTables, np_dtype
+    if storage is None:
+        storage = spec.storage()
     H, W = d.grid.height, d.grid.width
     n_per = d.grid.n_per_column
     n_exc = spec.n_exc_per_col
     bands = spec.halo_bands()
-    wdt = np.dtype(spec.weight_dtype)
+    wdt = np_dtype(storage.weight_dtype)
+    tdt = np_dtype(storage.tgt_dtype)
     band_of = np.full(d.region_cols, -1, np.int64)
     bandcol_of = np.full(d.region_cols, -1, np.int64)
     for bi, b in enumerate(bands):
@@ -322,7 +337,7 @@ def pack_synapse_stream(stream: dict, d: TileDecomposition, spec) -> dict:
         rows_s = rows[order]
         within = np.arange(len(rows_s)) - np.repeat(
             np.concatenate([[0], np.cumsum(counts)[:-1]]), counts)
-        tgt_a = np.zeros((n_rows + 1, cap), np.int32)
+        tgt_a = np.zeros((n_rows + 1, cap), tdt)
         w_a = np.zeros((n_rows + 1, cap), wdt)
         d_a = np.zeros((n_rows + 1, cap), np.int8)
         sidx = np.nonzero(sel)[0][order]
@@ -332,18 +347,20 @@ def pack_synapse_stream(stream: dict, d: TileDecomposition, spec) -> dict:
         nnz = np.concatenate([counts, [0]]).astype(np.int32)
         return {"tgt": tgt_a, "w": w_a, "dslot": d_a, "nnz": nnz}
 
+    band_caps = list(storage.halo_caps)
     out = {"local": [], "halo": [[] for _ in bands]}
     for y in range(d.tiles_y):
         row_out, halo_rows = [], [[] for _ in bands]
         for x in range(d.tiles_x):
             here = (ty2 == y) & (tx2 == x)
             row_out.append(pack(
-                here & in_tile, spec.n_local, spec.cap_local, row_local,
-                f"tile ({y},{x}) local tier"))
+                here & in_tile, spec.n_local, storage.cap_local,
+                row_local, f"tile ({y},{x}) local tier"))
             for b_i, b in enumerate(bands):
                 halo_rows[b_i].append(pack(
-                    here & ~in_tile & (bi == b_i), b["rows"], b["cap"],
-                    row_band, f"tile ({y},{x}) halo band {b_i}"))
+                    here & ~in_tile & (bi == b_i), b["rows"],
+                    band_caps[b_i], row_band,
+                    f"tile ({y},{x}) halo band {b_i}"))
         out["local"].append(row_out)
         for b_i in range(len(bands)):
             out["halo"][b_i].append(halo_rows[b_i])
@@ -353,24 +370,26 @@ def pack_synapse_stream(stream: dict, d: TileDecomposition, spec) -> dict:
             [np.stack([t[k] for t in row]) for row in grid_of_tiers]))
             for k in ("tgt", "w", "dslot", "nnz")}
 
-    return {"local": stack(out["local"]),
-            "halo": [stack(g) for g in out["halo"]]}
+    return SynapseTables(stack(out["local"]),
+                         [stack(g) for g in out["halo"]], storage)
 
 
-def retile_tables(tables: dict, old_d: TileDecomposition, old_spec,
-                  new_d: TileDecomposition, new_spec) -> dict:
+def retile_tables(tables, old_d: TileDecomposition, old_spec,
+                  new_d: TileDecomposition, new_spec, storage=None):
     """Relay a (stacked) synapse realization onto a new tiling by
     global (pre, post) synapse identity -- weights travel, nothing is
-    re-sampled.  Pure host-side; callers ``device_put`` the result."""
+    re-sampled.  Pure host-side; callers ``device_put`` the result.
+    ``storage`` selects the packed layout (default: ``new_spec``'s
+    analytic descriptor)."""
     if old_d.grid != new_d.grid:
         raise ValueError(f"grid mismatch: {old_d.grid} != {new_d.grid}")
     stream = gather_synapse_stream(tables, old_d, old_spec)
-    return pack_synapse_stream(stream, new_d, new_spec)
+    return pack_synapse_stream(stream, new_d, new_spec, storage)
 
 
-def retile_plastic(plastic: dict, old_tables: dict,
+def retile_plastic(plastic: dict, old_tables,
                    old_d: TileDecomposition, old_spec,
-                   new_d: TileDecomposition, new_spec) -> dict:
+                   new_d: TileDecomposition, new_spec, storage=None):
     """Relay the plastic carry (per-tier weights + STDP traces).
 
     ``old_tables`` supplies the old tiling's realization *structure*
@@ -387,7 +406,8 @@ def retile_plastic(plastic: dict, old_tables: dict,
                  zip(old_tables["halo"], plastic["w"][1:])],
     }
     new_tabs = pack_synapse_stream(
-        gather_synapse_stream(carried, old_d, old_spec), new_d, new_spec)
+        gather_synapse_stream(carried, old_d, old_spec), new_d, new_spec,
+        storage)
     w_new = [new_tabs["local"]["w"]] + [t["w"] for t in new_tabs["halo"]]
 
     # pre-traces: per pre-neuron values; the home (local-tier) copy is

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List
+from typing import List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -46,11 +46,222 @@ MAX_HALO_BANDS = 8
 # Version of the table-sampling procedure.  ``build_tables(seed)`` is
 # deterministic *within* a version, but any change to the rng draw
 # sequence (e.g. v2: sampling vectorized across tile columns per
-# stencil offset, replacing the per-block loop of v1) yields a
+# stencil offset, replacing the per-block loop of v1) or to the stored
+# weight values (v3: weights quantized to the spec's ``weight_dtype``
+# at sampling time, so storage-dtype casts are value-exact) yields a
 # different synapse realization for the same seed.  Rides in checkpoint
 # meta so a resume that would silently rebuild a different network is
 # refused instead (runtime/sim_driver.py).
-TABLE_REALIZATION_VERSION = 2
+TABLE_REALIZATION_VERSION = 3
+
+
+def np_dtype(name: str) -> np.dtype:
+    """numpy dtype for ``name``, including ml_dtypes extensions
+    (``np.dtype("bfloat16")`` raises; going through jnp does not)."""
+    return np.dtype(jnp.dtype(name))
+
+
+# --------------------------------------------------------------------------
+# Typed storage / plan contract
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TableStorage:
+    """How one shard's synapse tables are physically stored.
+
+    The descriptor is identical across shards (SPMD-safe: caps are the
+    cross-shard maximum of the realized per-row occupancy), hashable
+    (rides pytree treedefs as static aux data), and JSON-serializable
+    (rides checkpoint meta so a resume that would silently reinterpret
+    the stored bytes is refused instead).
+
+    ``cap_local`` / ``halo_caps`` are the *materialized* row capacities.
+    They start at the spec's analytic caps and shrink when
+    ``compress_tables`` truncates all-padding trailing columns (bucketed
+    row storage for bands whose realized nnz is far below the analytic
+    cap).  ``accum_dtype`` is the dtype delivery accumulates in; weights
+    are cast up from ``weight_dtype`` before any arithmetic, which keeps
+    delivery bit-identical across storage formats because sampled
+    weights are quantized to ``weight_dtype`` at build time.
+    """
+    tgt_dtype: str = "int32"
+    weight_dtype: str = "float32"
+    accum_dtype: str = "float32"
+    cap_local: int = 0
+    halo_caps: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.accum_dtype != "float32":
+            raise ValueError(
+                f"accum_dtype={self.accum_dtype!r}: delivery accumulates "
+                "in float32 (kernel MXU contract); other accumulation "
+                "dtypes are not supported")
+
+    def meta(self) -> dict:
+        """JSON-ready form for checkpoint manifests."""
+        return {"tgt_dtype": self.tgt_dtype,
+                "weight_dtype": self.weight_dtype,
+                "accum_dtype": self.accum_dtype,
+                "cap_local": int(self.cap_local),
+                "halo_caps": [int(c) for c in self.halo_caps]}
+
+    @classmethod
+    def from_meta(cls, d: dict) -> "TableStorage":
+        return cls(tgt_dtype=d["tgt_dtype"],
+                   weight_dtype=d["weight_dtype"],
+                   accum_dtype=d.get("accum_dtype", "float32"),
+                   cap_local=int(d["cap_local"]),
+                   halo_caps=tuple(int(c) for c in d["halo_caps"]))
+
+    def caps(self) -> List[int]:
+        """Per-tier row capacities, local first then each halo band."""
+        return [self.cap_local] + list(self.halo_caps)
+
+
+@dataclasses.dataclass(frozen=True)
+class TierPlan:
+    """Static sizing of one delivery tier (local, or one halo band)."""
+    cap: int           # row capacity (columns of the tier's tables)
+    active_cap: int    # event-compaction list size
+    rows: int          # source rows (excluding the sink row)
+    entries: int       # active_cap * cap
+    entries_padded: int  # entries, lane-aligned
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryGeometry:
+    """Lane-packed entry-block geometry of the fused delivery launch."""
+    lanes: int
+    entry_sublanes: int
+    entry_block: int
+    entries: int
+    entries_padded: int
+    n_blocks: int
+    packed_shape: Tuple[int, int]
+
+
+@jax.tree_util.register_pytree_node_class
+class SynapseTables:
+    """One shard's synapse tables as a typed pytree.
+
+    Children are the ``local`` tier dict and the tuple of ``halo`` tier
+    dicts (each ``{"tgt", "w", "dslot", "nnz"}``); the ``storage``
+    descriptor is static aux data, so two SynapseTables only share a
+    treedef when they share a storage format -- shardings, shard_map
+    in_specs, and abstract inputs all validate against it for free.
+
+    ``stats`` is a host-side build report (synapse counts, padding); it
+    is *not* part of the pytree and is dropped by tree transformations.
+    String indexing (``tables["local"]``) is kept so existing
+    dict-shaped call sites keep working.
+    """
+
+    def __init__(self, local: dict, halo, storage: TableStorage,
+                 stats: Optional[dict] = None):
+        self.local = local
+        self.halo = tuple(halo)
+        self.storage = storage
+        self.stats = stats
+
+    def tree_flatten(self):
+        return (self.local, self.halo), self.storage
+
+    @classmethod
+    def tree_unflatten(cls, storage, children):
+        local, halo = children
+        return cls(local, halo, storage)
+
+    # ---- dict-compatible access -----------------------------------------
+    def __getitem__(self, key):
+        if key == "local":
+            return self.local
+        if key == "halo":
+            return self.halo
+        if key == "stats":
+            return self.stats
+        raise KeyError(key)
+
+    def get(self, key, default=None):
+        try:
+            v = self[key]
+        except KeyError:
+            return default
+        return v if v is not None else default
+
+    def tiers(self) -> List[dict]:
+        return [self.local] + list(self.halo)
+
+    def replace(self, **kw) -> "SynapseTables":
+        out = {"local": self.local, "halo": self.halo,
+               "storage": self.storage, "stats": self.stats}
+        out.update(kw)
+        return SynapseTables(**out)
+
+    def __repr__(self):
+        return (f"SynapseTables(tiers={1 + len(self.halo)}, "
+                f"storage={self.storage})")
+
+
+def with_local_tier(tables, local_tier: dict):
+    """``tables`` with its local tier replaced; accepts the typed pytree
+    or a legacy ``{"local": ..., "halo": [...]}`` dict."""
+    if isinstance(tables, SynapseTables):
+        return tables.replace(local=local_tier)
+    return dict(tables, local=local_tier)
+
+
+def materialized_table_bytes(tables: SynapseTables,
+                             n_shards: int = 1) -> int:
+    """Exact per-shard bytes of the materialized table arrays (tables
+    may be per-shard or stacked over ``n_shards`` leading entries)."""
+    total = sum(int(np.prod(a.shape)) * np.dtype(a.dtype).itemsize
+                for tier in tables.tiers() for a in tier.values())
+    return total // max(n_shards, 1)
+
+
+def compress_tables(tables: SynapseTables) -> SynapseTables:
+    """Truncate each tier's all-padding trailing columns.
+
+    Row capacities come from the spec's analytic tail bound
+    (mean + 4 sigma), but the realized max occupancy of a tier --
+    especially outer halo bands at ``halo_floor=0`` -- is often far
+    below it.  Columns past the realized max nnz hold only (0, 0.0, 0)
+    padding, so dropping them is value-exact: the XLA scatter adds
+    zeros from rows that never index there, and the kernel's lane
+    stream simply gets shorter.
+
+    Works on per-shard and on stacked (leading shard axes) tables; the
+    cap is the max over every shard, so the compressed storage
+    descriptor stays identical across shards (SPMD-safe).
+    """
+    def realized_cap(tier, cap):
+        nnz = np.asarray(jax.device_get(tier["nnz"]))
+        hi = int(nnz.max()) if nnz.size else 0
+        return max(min(hi, cap), 1)
+
+    def cut(tier, cap):
+        return {k: (v if k == "nnz" else v[..., :cap])
+                for k, v in tier.items()}
+
+    st = tables.storage
+    cap_l = realized_cap(tables.local, st.cap_local)
+    caps_h = tuple(realized_cap(t, c)
+                   for t, c in zip(tables.halo, st.halo_caps))
+    new_storage = dataclasses.replace(st, cap_local=cap_l,
+                                      halo_caps=caps_h)
+    out = SynapseTables(cut(tables.local, cap_l),
+                        [cut(t, c) for t, c in zip(tables.halo, caps_h)],
+                        new_storage, stats=tables.stats)
+    if out.stats is not None:
+        n_shards = 1
+        nnz = out.local["nnz"]
+        if nnz.ndim > 1:                       # stacked over shards
+            n_shards = int(np.prod(nnz.shape[:-1]))
+        tb = materialized_table_bytes(out, n_shards)
+        out.stats = dict(out.stats, table_bytes=tb,
+                         bytes_per_synapse=tb * n_shards
+                         / max(out.stats.get("n_synapses", 0), 1))
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -183,37 +394,62 @@ class SynapseTableSpec:
     def active_cap_band(self, band: dict) -> int:
         return self._active_cap(band["rows"])
 
+    # ---- storage descriptor ---------------------------------------------
+    def storage(self) -> TableStorage:
+        """Analytic storage descriptor: spec-level dtypes and the
+        analytic (uncompressed) row capacities.  Target ids are int16
+        whenever a tile holds < 2**15 neurons (every config we run);
+        the kernel gather widens them to int32 on the fly.
+        """
+        tgt_dt = "int16" if self.n_local < 2 ** 15 else "int32"
+        return TableStorage(
+            tgt_dtype=tgt_dt, weight_dtype=self.weight_dtype,
+            accum_dtype="float32", cap_local=self.cap_local,
+            halo_caps=tuple(b["cap"] for b in self.halo_bands()))
+
+    def _storage(self, storage: Optional[TableStorage]) -> TableStorage:
+        st = storage if storage is not None else self.storage()
+        bands = self.halo_bands()
+        if len(st.halo_caps) != len(bands):
+            raise ValueError(
+                f"storage descriptor has {len(st.halo_caps)} halo caps "
+                f"but the spec defines {len(bands)} halo bands")
+        return st
+
     # ---- kernel-facing delivery plan ------------------------------------
     def band_caps(self) -> List[int]:
         """Row capacity of each halo fan-out band (kernel block widths)."""
         return [b["cap"] for b in self.halo_bands()]
 
-    def delivery_plan(self) -> List[dict]:
+    def delivery_plan(self, storage: Optional[TableStorage] = None
+                      ) -> List[TierPlan]:
         """Static per-tier sizing for the fused banded delivery kernel.
 
-        One entry per delivery tier, local first then each halo band:
-        ``{"cap": row_capacity, "active_cap": event-list size,
-        "rows": source rows, "entries": active_cap * cap,
-        "entries_padded": entries lane-aligned}``.  Everything the
-        kernel layer needs to lay out its lane-packed entry blocks is
-        here -- tables supply only data -- and the kernel validates the
-        tables it is handed against this plan, so the engines compile
-        against a spec-level contract.
+        One ``TierPlan`` per delivery tier, local first then each halo
+        band.  Everything the kernel layer needs to lay out its
+        lane-packed entry blocks is here -- tables supply only data --
+        and the kernel validates the tables it is handed against this
+        plan, so the engines compile against a spec-level contract.
+        Pass the tables' ``storage`` so the plan sizes against the
+        materialized (possibly compressed) caps rather than the
+        analytic ones.
         """
         from ..kernels.synaptic_accum import LANES  # layout owner
+        st = self._storage(storage)
 
         def tier(cap, active_cap, rows):
             entries = active_cap * cap
-            return {"cap": cap, "active_cap": active_cap, "rows": rows,
-                    "entries": entries,
-                    "entries_padded": -(-entries // LANES) * LANES}
+            return TierPlan(cap=cap, active_cap=active_cap, rows=rows,
+                            entries=entries,
+                            entries_padded=-(-entries // LANES) * LANES)
 
-        plan = [tier(self.cap_local, self.active_cap_local, self.n_local)]
-        for b in self.halo_bands():
-            plan.append(tier(b["cap"], self.active_cap_band(b), b["rows"]))
+        plan = [tier(st.cap_local, self.active_cap_local, self.n_local)]
+        for b, cap in zip(self.halo_bands(), st.halo_caps):
+            plan.append(tier(cap, self.active_cap_band(b), b["rows"]))
         return plan
 
-    def entry_geometry(self) -> dict:
+    def entry_geometry(self, storage: Optional[TableStorage] = None
+                       ) -> EntryGeometry:
         """Lane-packed entry-block geometry of the fused delivery launch:
         the ``(E / LANES, LANES)`` packed stream shape and the number of
         ``ENTRY_BLOCK``-entry grid steps the kernel will take.  Shapes
@@ -222,13 +458,13 @@ class SynapseTableSpec:
         """
         from ..kernels.synaptic_accum import (ENTRY_BLOCK, ENTRY_SUBLANES,
                                               LANES, packed_total)
-        total = sum(p["entries_padded"] for p in self.delivery_plan())
+        total = sum(p.entries_padded for p in self.delivery_plan(storage))
         padded = packed_total(total)
-        return {"lanes": LANES, "entry_sublanes": ENTRY_SUBLANES,
-                "entry_block": ENTRY_BLOCK, "entries": total,
-                "entries_padded": padded,
-                "n_blocks": padded // ENTRY_BLOCK,
-                "packed_shape": (padded // LANES, LANES)}
+        return EntryGeometry(
+            lanes=LANES, entry_sublanes=ENTRY_SUBLANES,
+            entry_block=ENTRY_BLOCK, entries=total,
+            entries_padded=padded, n_blocks=padded // ENTRY_BLOCK,
+            packed_shape=(padded // LANES, LANES))
 
     # ---- index maps (static numpy constants) ---------------------------
     def local_positions_in_region(self) -> np.ndarray:
@@ -253,29 +489,27 @@ class SynapseTableSpec:
         return (base[:, None] + np.arange(self.n_exc_per_col)[None, :]).ravel()
 
     # ---- abstract shapes for the dry-run --------------------------------
-    def _tier_abstract(self, rows: int, cap: int):
-        wdt = jnp.dtype(self.weight_dtype)
+    def _tier_abstract(self, rows: int, cap: int, st: TableStorage):
         return {
-            "tgt": jax.ShapeDtypeStruct((rows + 1, cap), jnp.int32),
-            "w": jax.ShapeDtypeStruct((rows + 1, cap), wdt),
+            "tgt": jax.ShapeDtypeStruct((rows + 1, cap),
+                                        jnp.dtype(st.tgt_dtype)),
+            "w": jax.ShapeDtypeStruct((rows + 1, cap),
+                                      jnp.dtype(st.weight_dtype)),
             "dslot": jax.ShapeDtypeStruct((rows + 1, cap), jnp.int8),
             "nnz": jax.ShapeDtypeStruct((rows + 1,), jnp.int32),
         }
 
-    def abstract_tables(self):
-        return {
-            "local": self._tier_abstract(self.n_local, self.cap_local),
-            "halo": [self._tier_abstract(b["rows"], b["cap"])
-                     for b in self.halo_bands()],
-        }
+    def abstract_tables(self, storage: Optional[TableStorage] = None
+                        ) -> SynapseTables:
+        st = self._storage(storage)
+        return SynapseTables(
+            self._tier_abstract(self.n_local, st.cap_local, st),
+            [self._tier_abstract(b["rows"], cap, st)
+             for b, cap in zip(self.halo_bands(), st.halo_caps)],
+            st)
 
-    def table_bytes(self) -> int:
-        def tier_bytes(t):
-            return sum(int(np.prod(a.shape)) * a.dtype.itemsize
-                       for a in t.values())
-        tabs = self.abstract_tables()
-        return tier_bytes(tabs["local"]) + sum(
-            tier_bytes(t) for t in tabs["halo"])
+    def table_bytes(self, storage: Optional[TableStorage] = None) -> int:
+        return materialized_table_bytes(self.abstract_tables(storage))
 
     def expected_synapses(self) -> float:
         """Expected number of synapses stored in this shard's tables
@@ -295,7 +529,8 @@ class SynapseTableSpec:
 # Materialization (small configs / real runs)
 # --------------------------------------------------------------------------
 
-def _pack_rows(n_rows: int, cap: int, row_ids, tgts, ws, dslots, wdt):
+def _pack_rows(n_rows: int, cap: int, row_ids, tgts, ws, dslots, wdt,
+               tdt=np.int32):
     """Group synapse triples by source row and pad each row to ``cap``.
 
     Row ``n_rows`` (the extra last row) is the all-zero sink row used by
@@ -309,7 +544,13 @@ def _pack_rows(n_rows: int, cap: int, row_ids, tgts, ws, dslots, wdt):
     within = np.arange(len(row_ids)) - np.repeat(
         np.concatenate([[0], np.cumsum(counts)[:-1]]), counts)
     keep = within < cap
-    tgt_a = np.zeros((n_rows + 1, cap), dtype=np.int32)
+    tdt = np.dtype(tdt)
+    if len(tgts) and tdt.kind == "i" and \
+            int(tgts.max(initial=0)) > np.iinfo(tdt).max:
+        raise ValueError(
+            f"target ids up to {int(tgts.max())} do not fit the "
+            f"{tdt.name} storage dtype")
+    tgt_a = np.zeros((n_rows + 1, cap), dtype=tdt)
     w_a = np.zeros((n_rows + 1, cap), dtype=wdt)
     d_a = np.zeros((n_rows + 1, cap), dtype=np.int8)
     tgt_a[row_ids[keep], within[keep]] = tgts[keep]
@@ -346,18 +587,25 @@ def sample_blocks(rng, p: float, n_src: int, n_tgt: int, n_blocks: int):
 
 def build_tables(spec: SynapseTableSpec, tile_y: int, tile_x: int,
                  j_exc: float, j_inh: float, seed: int = 0,
-                 w_jitter: float = 0.25) -> dict:
+                 w_jitter: float = 0.25) -> SynapseTables:
     """Materialize the synapse tables of one shard (numpy, host-side).
 
     Only usable at reduced scale; full-scale configurations are exercised
-    through ``abstract_tables()`` by the dry-run.
+    through ``abstract_tables()`` by the dry-run.  Weights are quantized
+    to the storage dtype here, at sampling time, so later casts between
+    storage formats are value-exact (the v3 realization contract).
+    Returns tables at the *analytic* caps (identical shapes across
+    shards, so per-shard builds can be stacked); run ``compress_tables``
+    afterwards to truncate all-padding columns.
     """
     d = spec.decomp
     N = spec.n_per_col
     n_exc = spec.n_exc_per_col
     rng = np.random.default_rng(
         np.random.SeedSequence([seed, tile_y, tile_x]))
-    wdt = np.dtype(spec.weight_dtype)
+    storage = spec.storage()
+    wdt = np_dtype(storage.weight_dtype)
+    tdt = np_dtype(storage.tgt_dtype)
 
     region_active = d.region_active_mask(tile_y, tile_x)
     r = d.radius
@@ -438,29 +686,29 @@ def build_tables(spec: SynapseTableSpec, tile_y: int, tile_x: int,
     local_tab, clipped = _pack_rows(
         spec.n_local, spec.cap_local,
         cat(loc["rows"], np.int64), cat(loc["tgts"], np.int64),
-        cat(loc["ws"], wdt), cat(loc["ds"], np.int8), wdt)
+        cat(loc["ws"], wdt), cat(loc["ds"], np.int8), wdt, tdt)
     halo_tabs = []
     for b, h in zip(bands, hal):
         tab, cl = _pack_rows(
             b["rows"], b["cap"],
             cat(h["rows"], np.int64), cat(h["tgts"], np.int64),
-            cat(h["ws"], wdt), cat(h["ds"], np.int8), wdt)
+            cat(h["ws"], wdt), cat(h["ds"], np.int8), wdt, tdt)
         clipped += cl
         halo_tabs.append(tab)
 
     n_syn = int(local_tab["nnz"].sum()
                 + sum(t["nnz"].sum() for t in halo_tabs))
-    return {
-        "local": {k: jnp.asarray(v) for k, v in local_tab.items()},
-        "halo": [{k: jnp.asarray(v) for k, v in t.items()}
-                 for t in halo_tabs],
-        "stats": {
+    tb = spec.table_bytes(storage)
+    return SynapseTables(
+        {k: jnp.asarray(v) for k, v in local_tab.items()},
+        [{k: jnp.asarray(v) for k, v in t.items()} for t in halo_tabs],
+        storage,
+        stats={
             "n_synapses": n_syn,
             "clipped": clipped,
-            "table_bytes": spec.table_bytes(),
-            "bytes_per_synapse": spec.table_bytes() / max(n_syn, 1),
-        },
-    }
+            "table_bytes": tb,
+            "bytes_per_synapse": tb / max(n_syn, 1),
+        })
 
 
 # --------------------------------------------------------------------------
@@ -476,10 +724,14 @@ def deliver_gather_all(tables: dict, spikes_src: jnp.ndarray,
     """
     tgt, w, dslot = tables["tgt"], tables["w"], tables["dslot"]
     n_rows = tgt.shape[0] - 1
-    gate = spikes_src[:n_rows].astype(w.dtype)
-    contrib = (w[:n_rows] * gate[:, None]).astype(jnp.float32)
+    gate = spikes_src[:n_rows].astype(jnp.float32)
+    # cast weights up to the accumulation dtype *before* any arithmetic:
+    # with v3 sampling-time quantization the cast is value-exact, so
+    # delivery is bit-identical across weight storage dtypes
+    contrib = w[:n_rows].astype(jnp.float32) * gate[:, None]
     slots = (t_slot + dslot[:n_rows].astype(jnp.int32)) % d_ring
-    return i_ring.at[slots.ravel(), tgt[:n_rows].ravel()].add(contrib.ravel())
+    rows_t = tgt[:n_rows].astype(jnp.int32)
+    return i_ring.at[slots.ravel(), rows_t.ravel()].add(contrib.ravel())
 
 
 def deliver_events(tables: dict, spikes_src: jnp.ndarray,
@@ -495,7 +747,7 @@ def deliver_events(tables: dict, spikes_src: jnp.ndarray,
     n_rows = tgt.shape[0] - 1  # last row is the all-zero sink
     spk = spikes_src[:n_rows]
     (idx,) = jnp.nonzero(spk > 0, size=active_cap, fill_value=n_rows)
-    rows_t = tgt[idx]            # (A, cap)
+    rows_t = tgt[idx].astype(jnp.int32)   # (A, cap); widen int16 storage
     rows_w = w[idx].astype(jnp.float32)
     rows_d = dslot[idx].astype(jnp.int32)
     slots = (t_slot + rows_d) % d_ring

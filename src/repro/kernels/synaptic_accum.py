@@ -60,7 +60,7 @@ part Mosaic is most likely to want reworked.)
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -255,7 +255,7 @@ def event_delivery(tables: dict, spikes_src, i_ring, t_slot,
 
 def event_delivery_banded(tiers: Sequence[Tuple[dict, jnp.ndarray, int]],
                           i_ring, t_slot, d_ring: int, *,
-                          plan: Optional[Sequence[dict]] = None,
+                          plan=None,
                           interpret: bool = True):
     """Fused multi-tier delivery: ONE kernel launch for the local table
     plus every halo fan-out band across every ring tile.
@@ -263,11 +263,12 @@ def event_delivery_banded(tiers: Sequence[Tuple[dict, jnp.ndarray, int]],
     ``tiers``: sequence of (tables, spikes_src, active_cap); each tier's
     tables may have a different row capacity (the banded-halo layout) --
     entry flattening makes the concatenation capacity-agnostic.
-    ``plan``: optional per-tier sizing from
+    ``plan``: optional per-tier ``TierPlan`` sequence from
     ``SynapseTableSpec.delivery_plan()``; when given, the tables are
-    validated against it (the spec contract the engines compile
+    validated against it (the typed spec contract the engines compile
     against) and its lane-padded ``entries_padded`` sizes the per-tier
-    slice of the packed entry stream.
+    slice of the packed entry stream.  For compressed tables, pass the
+    plan derived from the tables' ``storage`` descriptor.
     Returns (ring, n_events, n_dropped) summed over tiers.
     """
     assert i_ring.shape[0] == d_ring
@@ -283,16 +284,15 @@ def event_delivery_banded(tiers: Sequence[Tuple[dict, jnp.ndarray, int]],
         n_rows, cap = tables["tgt"].shape[0] - 1, tables["tgt"].shape[1]
         if plan is not None:
             p = plan[ti]
-            if (p["rows"], p["cap"], p["active_cap"]) != (n_rows, cap,
-                                                          active_cap):
+            if (p.rows, p.cap, p.active_cap) != (n_rows, cap, active_cap):
                 raise ValueError(
                     f"tier {ti} does not match its delivery plan: tables "
                     f"are rows={n_rows} cap={cap} active_cap={active_cap}, "
-                    f"plan says rows={p['rows']} cap={p['cap']} "
-                    f"active_cap={p['active_cap']}")
+                    f"plan says rows={p.rows} cap={p.cap} "
+                    f"active_cap={p.active_cap}")
         idx, n_spk = compact_events(spikes_src, n_rows, active_cap)
         te, we, de = _gather_entries(tables, idx)
-        e_pad = (plan[ti]["entries_padded"] if plan is not None
+        e_pad = (plan[ti].entries_padded if plan is not None
                  else _ceil_to(te.shape[0], LANES))
         te, we, de = _pad_flat(te, we, de, e_pad)
         parts_t.append(te)

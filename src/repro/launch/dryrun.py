@@ -186,8 +186,8 @@ def build_cell(arch: str, shape_name: str, mesh, variant: str = None):
 
 def build_snn_cell(case_name: str, mesh, variant: str = None):
     from repro.configs.snn import CASES
-    from repro.core.dist_engine import (DistConfig, abstract_dist_inputs,
-                                        make_sim_fn)
+    from repro.core.dist_engine import (DistConfig, SimInputs,
+                                        abstract_dist_inputs, make_sim_fn)
     case = CASES[case_name]
     overrides = VARIANTS.get(variant, {}) if variant else {}
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -211,7 +211,7 @@ def build_snn_cell(case_name: str, mesh, variant: str = None):
             "table_bytes_per_shard": spec.table_bytes(),
             "halo_radius": ecfg.law.radius,
             "tiles": (ty, tx)}
-    return sim, (state_abs, tables_abs), None, (0,), meta
+    return sim, (state_abs, SimInputs(tables=tables_abs)), None, (0,), meta
 
 
 def analytic_memory(abstract_args, shardings, mesh) -> dict:
@@ -285,6 +285,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         if shardings is not None:
             mem_d.update(analytic_memory(args, shardings, mesh))
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, list):       # older jax returns [dict]
+            ca = ca[0] if ca else {}
         hlo = compiled.as_text()
         costs = analyze_hlo(hlo)
 

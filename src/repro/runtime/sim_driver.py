@@ -69,12 +69,13 @@ from jax.sharding import NamedSharding
 
 from ..checkpoint.store import (checkpoint_meta, latest_step,
                                 refuse_meta_drift, restore_checkpoint)
-from ..core.dist_engine import (DistConfig, abstract_dist_inputs,
+from ..core.dist_engine import (DistConfig, SimInputs, abstract_dist_inputs,
                                 build_dist_inverse_index, build_dist_tables,
                                 dist_shardings, init_dist_plastic_state,
                                 init_dist_state, make_sim_fn)
 from ..core.retile import (gather_synapse_stream, retile_config,
                            retile_plastic, retile_state, retile_tables)
+from ..core.synapses import TableStorage, compress_tables
 from .driver import DriverConfig, FaultTolerantLoop, log
 
 METRIC_KEYS = ("spikes", "events", "dropped")
@@ -124,7 +125,6 @@ class SimDriver(FaultTolerantLoop):
         self.fault_hook = fault_hook
         self._preempt_after = preempt_after_segments
         self._segments_done = 0
-        self._state_sh, table_sh = dist_shardings(dist_cfg, mesh)
         e = dist_cfg.engine
         self.plastic = e.stdp is not None
 
@@ -142,19 +142,33 @@ class SimDriver(FaultTolerantLoop):
                     self._born_tiles = tuple(born)
         self._birth_tables = None
         if self.plastic and self._born_tiles != dist_cfg.tiles:
+            from ..core.synapses import materialized_table_bytes
             born_cfg = retile_config(dist_cfg, *self._born_tiles)
             birth, self.table_stats = build_dist_tables(born_cfg)
             self._birth_tables = jax.tree.map(np.asarray, birth)
-            tables = retile_tables(
+            # relayed at the analytic caps, then compressed: the caps
+            # derive from the realized occupancy, which the relay
+            # preserves exactly, so any process resuming on this tiling
+            # reconstructs the identical storage descriptor
+            tables = compress_tables(retile_tables(
                 self._birth_tables, born_cfg.engine.decomp,
-                born_cfg.engine.spec(), e.decomp, e.spec())
-            self.table_stats = dict(self.table_stats,
-                                    table_bytes_per_shard=e.spec()
-                                    .table_bytes())
+                born_cfg.engine.spec(), e.decomp, e.spec()))
+            ty, tx = dist_cfg.tiles
+            self.table_stats = dict(
+                self.table_stats,
+                table_bytes_per_shard=materialized_table_bytes(
+                    tables, ty * tx))
         else:
             tables, self.table_stats = build_dist_tables(dist_cfg)
             if self.plastic:
                 self._birth_tables = jax.tree.map(np.asarray, tables)
+        # the materialized (compressed) storage descriptor: everything
+        # that sizes shapes from the spec -- shardings, the delivery
+        # plan, plastic weight abstracts, checkpoint meta -- goes
+        # through it
+        self.storage = tables.storage
+        self._state_sh, table_sh = dist_shardings(dist_cfg, mesh,
+                                                  self.storage)
         self._tables_host = (jax.tree.map(np.asarray, tables)
                              if self.plastic else None)
         self.tables = jax.device_put(tables, table_sh)
@@ -195,7 +209,11 @@ class SimDriver(FaultTolerantLoop):
         # the driver never consumes the per-step spike output (the
         # spool is the per-step record), so don't materialize it
         self._sim = make_sim_fn(dist_cfg, mesh, segment_steps,
-                                record_rate=False, recorder=self.recorder)
+                                record_rate=False, recorder=self.recorder,
+                                storage=self.storage)
+        self._sim_inputs = SimInputs(
+            tables=self.tables, inv_slots=self._inv_slots,
+            gids=self._gids if self.recorder is not None else None)
 
     # ---- checkpoint metadata (identity of the saved state) ------------
     def _meta(self) -> dict:
@@ -206,6 +224,7 @@ class SimDriver(FaultTolerantLoop):
                 "grid": [d.grid.height, d.grid.width, d.grid.n_per_column],
                 "law": e.law.kind, "radius": d.radius, "seed": e.seed,
                 "table_realization": TABLE_REALIZATION_VERSION,
+                "storage": self.storage.meta(),
                 "segment_steps": self.step_size,
                 "stdp": (dataclasses.asdict(e.stdp)
                          if self.plastic else None),
@@ -275,9 +294,16 @@ class SimDriver(FaultTolerantLoop):
         old_tiles = (meta.get("tiles_y", d.tiles_y),
                      meta.get("tiles_x", d.tiles_x))
         if old_tiles == (d.tiles_y, d.tiles_x):
+            # same tiling => deterministically the same storage
+            # descriptor; drift means the checkpointed bytes (weight
+            # dtype, compressed caps) no longer describe this build --
+            # refuse rather than reinterpret (keys absent from older
+            # manifests are skipped by refuse_meta_drift)
+            refuse_meta_drift(meta, mine, ("storage",), self.cfg.ckpt_dir)
             log.info("resuming from sim step %d", last)
             state = restore_checkpoint(
-                self.cfg.ckpt_dir, last, abstract_dist_inputs(self.dist_cfg)[0],
+                self.cfg.ckpt_dir, last,
+                abstract_dist_inputs(self.dist_cfg, self.storage)[0],
                 shardings=self._state_sh)
         else:
             if not self.allow_retile:
@@ -288,8 +314,16 @@ class SimDriver(FaultTolerantLoop):
             log.info("resuming from sim step %d with retile %s -> %s",
                      last, old_tiles, (d.tiles_y, d.tiles_x))
             old_cfg = retile_config(self.dist_cfg, *old_tiles)
+            # the old tiling's storage descriptor (compressed caps,
+            # weight dtype) sizes the checkpointed plastic weight
+            # tiers; it rides in the manifest (any checkpoint new
+            # enough to pass the table_realization gate carries it)
+            old_storage = (TableStorage.from_meta(meta["storage"])
+                           if meta.get("storage") is not None
+                           else old_cfg.engine.spec().storage())
             host_state = restore_checkpoint(
-                self.cfg.ckpt_dir, last, abstract_dist_inputs(old_cfg)[0])
+                self.cfg.ckpt_dir, last,
+                abstract_dist_inputs(old_cfg, old_storage)[0])
             # the relayout zeroes per-tile metrics: fold the restored
             # partial sums into the global base so totals survive the
             # retile exactly (whatever tiling we came from)
@@ -310,12 +344,16 @@ class SimDriver(FaultTolerantLoop):
                 else:
                     born_cfg = retile_config(self.dist_cfg,
                                              *self._born_tiles)
-                    old_tabs = retile_tables(
+                    # compressed exactly as the old process built them
+                    # (the relay preserves per-row occupancy, so the
+                    # realized caps -- and hence the checkpointed w
+                    # shapes -- are reproduced deterministically)
+                    old_tabs = compress_tables(retile_tables(
                         self._birth_tables, born_cfg.engine.decomp,
-                        born_cfg.engine.spec(), old_d, old_spec)
+                        born_cfg.engine.spec(), old_d, old_spec))
                 state["plastic"] = retile_plastic(
                     plastic_host, old_tabs, old_d, old_spec, d,
-                    self.dist_cfg.engine.spec())
+                    self.dist_cfg.engine.spec(), storage=self.storage)
             state = jax.device_put(state, self._state_sh)
         if self.spool is not None:
             # exactly-once: cut every log back to this checkpoint's
@@ -328,15 +366,11 @@ class SimDriver(FaultTolerantLoop):
     def _step_once(self, state, step):
         if self.fault_hook:
             self.fault_hook(step)
-        args = [state, self.tables]
-        if self.plastic:
-            args.append(self._inv_slots)
         if self.recorder is not None:
-            args.append(self._gids)
-            state, _, rec = self._sim(*args)
+            state, _, rec = self._sim(state, self._sim_inputs)
             self._drain_recorder(rec)
         else:
-            state, _ = self._sim(*args)
+            state, _ = self._sim(state, self._sim_inputs)
         self._segments_done += 1
         if self._preempt_after is not None \
                 and self._segments_done >= self._preempt_after:

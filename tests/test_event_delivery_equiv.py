@@ -151,14 +151,21 @@ def test_delivery_plan_shapes():
     tabs = build_tables(spec, 1, 1, j_exc=0.4, j_inh=-2.0, seed=0)
     tiers = [tabs["local"]] + list(tabs["halo"])
     assert len(plan) == len(tiers)
-    assert plan[0]["rows"] == spec.n_local
-    assert spec.band_caps() == [p["cap"] for p in plan[1:]]
+    assert plan[0].rows == spec.n_local
+    assert spec.band_caps() == [p.cap for p in plan[1:]]
     for p, tab in zip(plan, tiers):
-        assert tab["tgt"].shape == (p["rows"] + 1, p["cap"])
-        assert p["active_cap"] <= p["rows"] + 1
-        assert p["entries"] == p["active_cap"] * p["cap"]
-        assert p["entries_padded"] >= p["entries"]
-        assert p["entries_padded"] % LANES == 0
+        assert tab["tgt"].shape == (p.rows + 1, p.cap)
+        assert p.active_cap <= p.rows + 1
+        assert p.entries == p.active_cap * p.cap
+        assert p.entries_padded >= p.entries
+        assert p.entries_padded % LANES == 0
+    # a compressed build's realized caps ride in its storage descriptor,
+    # and the plan sized from it matches the truncated tables
+    from repro.core.synapses import compress_tables
+    ctabs = compress_tables(tabs)
+    cplan = spec.delivery_plan(ctabs.storage)
+    for p, tab in zip(cplan, [ctabs["local"]] + list(ctabs["halo"])):
+        assert tab["tgt"].shape == (p.rows + 1, p.cap)
 
 
 def test_entry_geometry_contract():
@@ -167,12 +174,12 @@ def test_entry_geometry_contract():
     spec = _dist_spec(exponential_law())
     plan = spec.delivery_plan()
     geo = spec.entry_geometry()
-    assert geo["lanes"] == LANES and geo["entry_block"] == ENTRY_BLOCK
-    assert geo["entries"] == sum(p["entries_padded"] for p in plan)
-    assert geo["entries_padded"] % ENTRY_BLOCK == 0
-    assert geo["entries_padded"] >= max(geo["entries"], ENTRY_BLOCK)
-    assert geo["n_blocks"] == geo["entries_padded"] // ENTRY_BLOCK
-    assert geo["packed_shape"] == (geo["entries_padded"] // LANES, LANES)
+    assert geo.lanes == LANES and geo.entry_block == ENTRY_BLOCK
+    assert geo.entries == sum(p.entries_padded for p in plan)
+    assert geo.entries_padded % ENTRY_BLOCK == 0
+    assert geo.entries_padded >= max(geo.entries, ENTRY_BLOCK)
+    assert geo.n_blocks == geo.entries_padded // ENTRY_BLOCK
+    assert geo.packed_shape == (geo.entries_padded // LANES, LANES)
 
 
 def test_plan_mismatch_is_rejected(rng):
@@ -184,7 +191,7 @@ def test_plan_mismatch_is_rejected(rng):
     tiers = [(tabs["local"], jnp.zeros(spec.n_local),
               spec.active_cap_local)]
     plan = spec.delivery_plan()
-    bad = [dict(plan[0], cap=plan[0]["cap"] + 1)]
+    bad = [dataclasses.replace(plan[0], cap=plan[0].cap + 1)]
     with pytest.raises(ValueError, match="does not match"):
         event_delivery_banded(tiers, ring0, 0, spec.d_ring, plan=bad,
                               interpret=True)

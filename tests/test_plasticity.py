@@ -12,7 +12,8 @@ import numpy as np
 import pytest
 
 from repro.core.connectivity import exponential_law, gaussian_law
-from repro.core.dist_engine import (DistConfig, build_dist_inverse_index,
+from repro.core.dist_engine import (DistConfig, SimInputs,
+                                    build_dist_inverse_index,
                                     build_dist_tables,
                                     init_dist_plastic_state,
                                     init_dist_state, make_sim_fn)
@@ -81,8 +82,8 @@ def test_dist_plastic_matches_single_shard(law):
     dtabs, _ = build_dist_tables(dist)
     state["plastic"] = init_dist_plastic_state(dist, dtabs)
     slots, _ = build_dist_inverse_index(dist, dtabs)
-    sim = make_sim_fn(dist, mesh, steps)
-    dstate, per_d = sim(state, dtabs, slots)
+    sim = make_sim_fn(dist, mesh, steps, storage=dtabs.storage)
+    dstate, per_d = sim(state, SimInputs(tables=dtabs, inv_slots=slots))
 
     assert np.asarray(per).sum() > 0            # the run actually spiked
     np.testing.assert_array_equal(np.asarray(per_d)[0, 0],

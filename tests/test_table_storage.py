@@ -1,0 +1,287 @@
+"""Typed compressed synapse tables (ISSUE 6): the ``TableStorage``
+descriptor, value-exact cap compression, delivery equivalence on
+compressed tables across both laws and both engines, retile-relay
+exactness across storage formats, and the checkpoint storage-drift
+refusal."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.connectivity import exponential_law, gaussian_law
+from repro.core.dist_engine import DistConfig, SimInputs
+from repro.core.engine import (EngineConfig, build_shard_tables,
+                               init_sim_state, simulate)
+from repro.core.grid import ColumnGrid, TileDecomposition
+from repro.core.retile import gather_synapse_stream, retile_tables
+from repro.core.synapses import (SynapseTables, SynapseTableSpec,
+                                 TableStorage, build_tables,
+                                 compress_tables, deliver_events,
+                                 deliver_gather_all)
+from repro.parallel.compat import make_mesh
+from repro.runtime import DriverConfig, SimDriver
+
+
+def _law(name):
+    return gaussian_law() if name == "gaussian" else exponential_law()
+
+
+def _dist_spec(law, grid=8, n_per_col=12, tiles=(4, 2)):
+    d = TileDecomposition(grid=ColumnGrid(grid, grid, n_per_col),
+                          tiles_y=tiles[0], tiles_x=tiles[1],
+                          radius=law.radius)
+    return SynapseTableSpec(decomp=d, law=law, rate_cap_hz=25.0)
+
+
+def _single_cfg(law, grid=5, n_per_col=9, **kw):
+    d = TileDecomposition(grid=ColumnGrid(grid, grid, n_per_col),
+                          tiles_y=1, tiles_x=1, radius=law.radius)
+    return EngineConfig(decomp=d, law=law, seed=2, **kw)
+
+
+# ---------------------------------------------------------------------------
+# The storage descriptor
+# ---------------------------------------------------------------------------
+
+def test_storage_meta_roundtrip():
+    spec = _dist_spec(gaussian_law())
+    st = spec.storage()
+    assert st.tgt_dtype == "int16"          # n_local < 2**15
+    meta = st.meta()
+    json.dumps(meta)                        # manifest-ready
+    assert TableStorage.from_meta(meta) == st
+
+
+def test_storage_accum_dtype_is_pinned():
+    with pytest.raises(ValueError, match="accum"):
+        TableStorage(tgt_dtype="int16", weight_dtype="bfloat16",
+                     accum_dtype="bfloat16", cap_local=4, halo_caps=())
+
+
+def test_wide_tiles_get_int32_targets():
+    law = gaussian_law()
+    d = TileDecomposition(grid=ColumnGrid(64, 64, 9), tiles_y=1, tiles_x=1,
+                          radius=law.radius)
+    spec = SynapseTableSpec(decomp=d, law=law, single_shard=True)
+    assert spec.n_local >= 2 ** 15
+    assert spec.storage().tgt_dtype == "int32"
+
+
+def test_compressed_tables_match_their_abstract():
+    """The realized storage descriptor round-trips through the spec:
+    ``abstract_tables(tables.storage)`` reproduces every leaf's shape
+    and dtype, so shardings/in_specs built from the abstract always
+    line up with the actual tables."""
+    spec = _dist_spec(exponential_law())
+    tabs = compress_tables(build_tables(spec, 1, 1, j_exc=0.4,
+                                        j_inh=-2.0, seed=0))
+    abst = spec.abstract_tables(tabs.storage)
+    got = jax.tree.leaves(tabs)
+    want = jax.tree.leaves(abst)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert g.shape == w.shape and g.dtype == w.dtype
+    # compression only ever removes all-padding columns
+    dense = build_tables(spec, 1, 1, j_exc=0.4, j_inh=-2.0, seed=0)
+    assert tabs.storage.cap_local <= dense.storage.cap_local
+    np.testing.assert_array_equal(np.asarray(tabs["local"]["nnz"]),
+                                  np.asarray(dense["local"]["nnz"]))
+
+
+def test_simin_pytree_roundtrip():
+    """None fields vanish from the SimInputs pytree, so the same class
+    serves static, plastic and recording call signatures."""
+    spec = _dist_spec(gaussian_law())
+    tabs = compress_tables(build_tables(spec, 0, 0, j_exc=0.4,
+                                        j_inh=-2.0, seed=0))
+    si = SimInputs(tables=tabs)
+    leaves, treedef = jax.tree.flatten(si)
+    si2 = jax.tree.unflatten(treedef, leaves)
+    assert si2.inv_slots is None and si2.gids is None
+    assert si2.tables.storage == tabs.storage
+    # distinct storages => distinct treedefs (the contract shardings
+    # and shard_map in_specs rely on)
+    dense = build_tables(spec, 0, 0, j_exc=0.4, j_inh=-2.0, seed=0)
+    assert (jax.tree.structure(SimInputs(tables=dense))
+            != treedef)
+
+
+# ---------------------------------------------------------------------------
+# Delivery equivalence on compressed tables
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("law_name", ["gaussian", "exponential"])
+def test_compressed_delivery_bitwise_per_tier(law_name, rng):
+    """Cap truncation removes only all-zero-weight padding columns:
+    both XLA delivery paths produce a bit-identical ring from the
+    compressed and the dense tables, every tier, random spikes."""
+    spec = _dist_spec(_law(law_name))
+    dense = build_tables(spec, 1, 1, j_exc=0.4, j_inh=-2.0, seed=3)
+    comp = compress_tables(dense)
+    spikes = jnp.asarray((rng.random(spec.n_local) < 0.1)
+                         .astype(np.float32))
+    band_spikes = [jnp.asarray((rng.random(b["rows"]) < 0.1)
+                               .astype(np.float32))
+                   for b in spec.halo_bands()]
+    ring0 = jnp.asarray(rng.normal(size=(spec.d_ring, spec.n_local)),
+                        jnp.float32)
+    for tabs in (dense, comp):
+        tiers = [(tabs["local"], spikes, spec.active_cap_local)]
+        tiers += [(tab, spk, spec.active_cap_band(b)) for b, tab, spk in
+                  zip(spec.halo_bands(), tabs["halo"], band_spikes)]
+        ring_e = ring0
+        for tab, spk, cap in tiers:
+            ring_e, _, _ = deliver_events(tab, spk, ring_e, 2,
+                                          spec.d_ring, cap)
+        ring_g = ring0
+        for tab, spk, _ in tiers:
+            ring_g = deliver_gather_all(tab, spk, ring_g, 2, spec.d_ring)
+        if tabs is dense:
+            ring_e_dense, ring_g_dense = ring_e, ring_g
+    np.testing.assert_array_equal(np.asarray(ring_e),
+                                  np.asarray(ring_e_dense))
+    np.testing.assert_array_equal(np.asarray(ring_g),
+                                  np.asarray(ring_g_dense))
+
+
+@pytest.mark.parametrize("law_name", ["gaussian", "exponential"])
+def test_engine_spike_trains_identical_compressed_vs_dense(law_name):
+    """Full engine runs (ragged n_local, kernel and XLA paths) emit
+    identical spike trains from compressed and dense tables."""
+    cfg = _single_cfg(_law(law_name), use_kernels=False)
+    dense = build_shard_tables(cfg, compress=False)
+    comp = build_shard_tables(cfg)
+    assert comp.storage.cap_local <= dense.storage.cap_local
+    _, sp_dense = jax.jit(
+        lambda s: simulate(s, dense, cfg, 50))(init_sim_state(cfg))
+    _, sp_comp = jax.jit(
+        lambda s: simulate(s, comp, cfg, 50))(init_sim_state(cfg))
+    np.testing.assert_array_equal(np.asarray(sp_dense),
+                                  np.asarray(sp_comp))
+    cfg_k = dataclasses.replace(cfg, use_kernels="auto")
+    _, sp_kern = jax.jit(
+        lambda s: simulate(s, comp, cfg_k, 50))(init_sim_state(cfg_k))
+    np.testing.assert_array_equal(np.asarray(sp_dense),
+                                  np.asarray(sp_kern))
+
+
+def test_bf16_weights_roundtrip_exactly_through_float32():
+    """bfloat16 storage is the float32 realization rounded once at
+    build time, and every bf16 value is exactly representable in
+    float32 -- so the up-cast delivery arithmetic and the relay's
+    float32 canonical stream are value-exact for bf16 tables."""
+    from repro.core.synapses import np_dtype
+    law = gaussian_law()
+    cfg = _single_cfg(law, use_kernels=False)
+    cfg32 = dataclasses.replace(cfg, weight_dtype="float32")
+    t16 = build_shard_tables(cfg)
+    t32 = build_shard_tables(cfg32)
+    bf16 = np_dtype("bfloat16")
+    w16 = np.asarray(t16["local"]["w"])
+    assert w16.dtype == bf16
+    # same sampled realization, rounded once
+    np.testing.assert_array_equal(
+        w16, np.asarray(t32["local"]["w"])[:, :w16.shape[1]].astype(bf16))
+    # lossless f32 round-trip (what gather_synapse_stream relies on)
+    np.testing.assert_array_equal(w16.astype(np.float32).astype(bf16), w16)
+
+
+# ---------------------------------------------------------------------------
+# Retile relay across storage formats
+# ---------------------------------------------------------------------------
+
+def test_retile_relay_exact_across_storage_formats():
+    """The global-synapse-id relay is storage-format-invariant: relaying
+    a compressed bf16/int16 realization and its dense counterpart
+    yields bit-identical canonical streams, and compress-after-relay
+    reproduces the storage descriptor deterministically."""
+    law = gaussian_law()
+
+    from repro.core.stdp import STDPParams
+
+    def cfgs(tiles):
+        # plastic spec: halo floor 0.0, so every realized synapse has a
+        # slot on both tilings (the precondition the relay enforces)
+        dec = TileDecomposition(grid=ColumnGrid(4, 4, 10),
+                                tiles_y=tiles[0], tiles_x=tiles[1],
+                                radius=law.radius)
+        return DistConfig(engine=EngineConfig(decomp=dec, law=law, seed=3,
+                                              stdp=STDPParams()))
+
+    from repro.core.dist_engine import build_dist_tables
+    a, b = cfgs((1, 2)), cfgs((2, 1))
+    da, sa = a.engine.decomp, a.engine.spec()
+    db, sb = b.engine.decomp, b.engine.spec()
+    comp, _ = build_dist_tables(a)
+    dense, _ = build_dist_tables(a, compress=False)
+
+    def canon(stream):
+        w = np.ascontiguousarray(stream["w"]).astype(np.float32)
+        order = np.lexsort((w.view(np.uint32), stream["dslot"],
+                            stream["post"], stream["pre"]))
+        return np.column_stack(
+            [stream["pre"][order], stream["post"][order],
+             stream["dslot"][order].astype(np.int64),
+             w.view(np.uint32)[order].astype(np.int64)])
+
+    r_comp = retile_tables(comp, da, sa, db, sb)
+    r_dense = retile_tables(dense, da, sa, db, sb)
+    s_comp = canon(gather_synapse_stream(r_comp, db, sb))
+    s_dense = canon(gather_synapse_stream(r_dense, db, sb))
+    assert len(s_comp) > 0
+    np.testing.assert_array_equal(s_comp, s_dense)
+    # deterministic storage reconstruction: compressing either relay
+    # lands on the same realized descriptor
+    assert (compress_tables(r_comp).storage
+            == compress_tables(r_dense).storage)
+
+    # bf16/int16 (static) tables: the same-tiling canonicalization is
+    # value-exact through the float32 stream
+    stat = DistConfig(engine=EngineConfig(
+        decomp=da.__class__(grid=da.grid, tiles_y=1, tiles_x=2,
+                            radius=law.radius), law=law, seed=3))
+    t_b, _ = build_dist_tables(stat)
+    d_stat, s_stat = stat.engine.decomp, stat.engine.spec()
+    assert t_b.storage.weight_dtype == "bfloat16"
+    r_b = retile_tables(t_b, d_stat, s_stat, d_stat, s_stat)
+    np.testing.assert_array_equal(
+        canon(gather_synapse_stream(t_b, d_stat, s_stat)),
+        canon(gather_synapse_stream(r_b, d_stat, s_stat)))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint storage-drift refusal
+# ---------------------------------------------------------------------------
+
+def _driver(ckpt_dir, weight_dtype="bfloat16"):
+    law = gaussian_law()
+    dec = TileDecomposition(grid=ColumnGrid(4, 4, 10), tiles_y=1,
+                            tiles_x=1, radius=law.radius)
+    dist = DistConfig(engine=EngineConfig(decomp=dec, law=law, seed=3,
+                                          weight_dtype=weight_dtype))
+    cfg = DriverConfig(ckpt_dir=str(ckpt_dir), ckpt_every=1,
+                       backoff_s=0.01, handle_sigterm=False)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    return SimDriver(cfg, dist, mesh, segment_steps=10)
+
+
+def test_checkpoint_refuses_storage_drift(tmp_path):
+    """A same-tiling resume whose table storage no longer matches the
+    manifest (here: weight dtype changed between processes) is refused
+    -- the checkpointed state was stepped against different tables."""
+    _driver(tmp_path).run(10)
+    d = _driver(tmp_path, weight_dtype="float32")
+    with pytest.raises(ValueError, match="storage"):
+        d._restore_or_init()
+
+
+def test_checkpoint_meta_carries_storage(tmp_path):
+    from repro.checkpoint.store import checkpoint_meta, latest_step
+    d = _driver(tmp_path)
+    d.run(10)
+    meta = checkpoint_meta(str(tmp_path), latest_step(str(tmp_path)))
+    assert TableStorage.from_meta(meta["storage"]) == d.storage
