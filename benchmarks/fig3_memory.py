@@ -173,7 +173,7 @@ def run_bench(update_root: bool = False,
 
 def main():
     out = run_bench(update_root=False)
-    for law, m in out["laws"].items():
+    for m in out["laws"].values():
         print(f"{m['case']:28s} dense {m['dense']['bytes_per_synapse']:6.2f}"
               f" -> compressed {m['compressed']['bytes_per_synapse']:6.2f}"
               f" B/syn  ({m['reduction_vs_dense']:.2f}x, "

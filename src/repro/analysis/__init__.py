@@ -1,0 +1,28 @@
+"""repro-lint: repo-specific contract analysis.
+
+Each checker pass encodes an invariant the codebase has been burned by
+(see the module docstrings); the CLI lives at ``repro.launch.lint``.
+"""
+
+from .core import Checker, Finding, Module, Project
+from .donation import DonationChecker
+from .dtype_contracts import DtypeContractsChecker
+from .meta_drift import MetaDriftChecker
+from .pallas_geometry import PallasGeometryChecker
+from .pytree_aux import PytreeAuxChecker
+from .tracer_purity import TracerPurityChecker
+
+ALL_CHECKERS = (
+    TracerPurityChecker,
+    DtypeContractsChecker,
+    DonationChecker,
+    MetaDriftChecker,
+    PytreeAuxChecker,
+    PallasGeometryChecker,
+)
+
+__all__ = [
+    "ALL_CHECKERS", "Checker", "Finding", "Module", "Project",
+    "TracerPurityChecker", "DtypeContractsChecker", "DonationChecker",
+    "MetaDriftChecker", "PytreeAuxChecker", "PallasGeometryChecker",
+]

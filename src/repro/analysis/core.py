@@ -1,0 +1,503 @@
+"""Shared infrastructure for the repro-lint contract analyzer.
+
+The analyzer (``python -m repro.launch.lint``) is *repo-aware*: each
+checker pass encodes an invariant this codebase has already been burned
+by (donated-buffer reuse, meta fields missing from drift refusal,
+unseeded RNG inside traced code, ...).  This module holds what every
+pass shares:
+
+  * ``Module`` -- one parsed source file: AST, import-alias resolution,
+    per-line / per-file suppression pragmas;
+  * ``Project`` -- a set of modules plus the *call graph* and the
+    **traced set**: every function reachable from a ``jax.jit`` /
+    ``lax.scan`` / ``shard_map`` / ``pallas_call`` body.  Purity
+    checks only apply inside the traced set -- host-side timing or
+    seeded numpy RNG is fine, the same call inside a scan body is not;
+  * a tiny constant-expression evaluator (kernel geometry constants);
+  * the ``Finding`` record and the ``Checker`` base class.
+
+Suppression: a violating line may carry an inline pragma with a reason::
+
+    fan = np.zeros(shape, dtype=np.float64)  # repro-lint: ignore[dtype-bounds] host-side analytic precision
+
+(the pragma may also sit on a comment line directly above the
+violation), and a whole file opts out of one check with a comment
+line::
+
+    # repro-lint: ignore-file[tracer-purity] reason...
+
+Pragmas without a named check are invalid (a bare "ignore everything"
+escape hatch would defeat the point of per-invariant passes).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+_PRAGMA_RE = re.compile(
+    r"#\s*repro-lint:\s*(ignore(?:-file)?)\[([a-zA-Z0-9_,\- ]+)\]")
+
+# Callables whose function-valued arguments become traced code.  Matched
+# on the final dotted segment(s) of the resolved callee name.
+TRACE_INDUCERS = (
+    "jax.jit", "jax.vmap", "jax.pmap", "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "jax.remat", "jax.lax.scan", "jax.lax.fori_loop",
+    "jax.lax.while_loop", "jax.lax.cond", "jax.lax.switch",
+    "jax.lax.map", "jax.eval_shape",
+)
+# suffix-matched (local shims, jax.experimental paths)
+TRACE_INDUCER_SUFFIXES = (".shard_map", ".pallas_call", ".scan",
+                          ".fori_loop", ".while_loop", ".cond", ".switch")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One contract violation, anchored to a source line."""
+    path: str
+    line: int
+    check: str
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.check}] {self.message}"
+
+
+class Checker:
+    """One invariant pass.  ``name`` is the pragma/selection key."""
+
+    name: str = ""
+    description: str = ""
+
+    def run(self, project: "Project") -> Iterable[Finding]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Modules
+# ---------------------------------------------------------------------------
+
+def module_name_for(path: str) -> str:
+    """Dotted module name: paths under a ``src/`` root import as
+    ``repro.x.y``; everything else (tests, benchmarks, examples) gets a
+    path-derived name that is unique but never importable-colliding."""
+    norm = path.replace(os.sep, "/")
+    for marker in ("/src/", "src/"):
+        if marker in norm or norm.startswith("src/"):
+            idx = norm.rfind("/src/")
+            tail = norm[idx + 5:] if idx >= 0 else norm[len("src/"):]
+            return tail[:-3].replace("/", ".") if tail.endswith(".py") \
+                else tail.replace("/", ".")
+    return norm[:-3].replace("/", ".") if norm.endswith(".py") \
+        else norm.replace("/", ".")
+
+
+class Module:
+    """One parsed file: AST + import aliases + suppression pragmas."""
+
+    def __init__(self, path: str, source: Optional[str] = None,
+                 modname: Optional[str] = None):
+        if source is None:
+            with open(path) as f:
+                source = f.read()
+        self.path = path
+        self.source = source
+        self.modname = modname or module_name_for(path)
+        self.tree = ast.parse(source, filename=path)
+        self.lines = source.splitlines()
+        self.line_pragmas: Dict[int, Set[str]] = {}
+        self.file_pragmas: Set[str] = set()
+        for i, line in enumerate(self.lines, start=1):
+            m = _PRAGMA_RE.search(line)
+            if not m:
+                continue
+            checks = {c.strip() for c in m.group(2).split(",") if c.strip()}
+            if m.group(1) == "ignore-file":
+                self.file_pragmas |= checks
+                continue
+            self.line_pragmas.setdefault(i, set()).update(checks)
+            if line.lstrip().startswith("#"):
+                # a pragma on a comment-only line covers the remainder
+                # of its comment block and the first code line after it
+                j = i + 1
+                while j <= len(self.lines) \
+                        and self.lines[j - 1].lstrip().startswith("#"):
+                    self.line_pragmas.setdefault(j, set()).update(checks)
+                    j += 1
+                self.line_pragmas.setdefault(j, set()).update(checks)
+        self.aliases = self._collect_aliases()
+
+    # ---- imports -------------------------------------------------------
+    def _collect_aliases(self) -> Dict[str, str]:
+        """name -> fully dotted origin (``jnp`` -> ``jax.numpy``,
+        ``compress_tables`` -> ``repro.core.synapses.compress_tables``)."""
+        out: Dict[str, str] = {}
+        pkg_parts = self.modname.split(".")[:-1]
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    out[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:                       # relative import
+                    base_parts = pkg_parts[:len(pkg_parts)
+                                           - (node.level - 1)]
+                    base = ".".join(base_parts + (
+                        [node.module] if node.module else []))
+                else:
+                    base = node.module or ""
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    out[a.asname or a.name] = (
+                        f"{base}.{a.name}" if base else a.name)
+        return out
+
+    def resolve_dotted(self, expr: ast.expr) -> Optional[str]:
+        """Dotted name of an expression with its root import-alias
+        expanded; ``None`` for non-name expressions.  ``self.x`` keeps
+        the literal ``self`` root (callers resolve via class scope)."""
+        parts: List[str] = []
+        node = expr
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(node.id)
+        parts.reverse()
+        root = parts[0]
+        if root in self.aliases:
+            parts[0] = self.aliases[root]
+        return ".".join(parts)
+
+    def suppressed(self, check: str, line: int) -> bool:
+        if check in self.file_pragmas:
+            return True
+        return check in self.line_pragmas.get(line, ())
+
+
+# ---------------------------------------------------------------------------
+# Functions, call graph, traced set
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FnInfo:
+    """One function (or method, or nested function) in the project."""
+    module: Module
+    qual: str                         # "Class.method" / "outer.inner"
+    node: ast.AST                     # FunctionDef | AsyncFunctionDef | Lambda
+    parent: Optional["FnInfo"]
+
+    @property
+    def key(self) -> Tuple[str, str]:
+        return (self.module.modname, self.qual)
+
+    @property
+    def line(self) -> int:
+        return self.node.lineno
+
+    def __hash__(self):
+        return hash(self.key)
+
+    def __eq__(self, other):
+        return isinstance(other, FnInfo) and self.key == other.key
+
+
+class _Scope:
+    def __init__(self, parent: Optional["_Scope"]):
+        self.parent = parent
+        self.names: Dict[str, FnInfo] = {}
+
+    def lookup(self, name: str) -> Optional[FnInfo]:
+        s: Optional[_Scope] = self
+        while s is not None:
+            if name in s.names:
+                return s.names[name]
+            s = s.parent
+        return None
+
+
+@dataclasses.dataclass
+class CallSite:
+    call: ast.Call
+    callee: Optional[str]             # resolved dotted name (or None)
+    enclosing: Optional[FnInfo]       # None at module level
+
+
+class Project:
+    """A set of modules plus the shared call-graph / traced-set core."""
+
+    def __init__(self, modules: Sequence[Module]):
+        self.modules = list(modules)
+        self.functions: Dict[Tuple[str, str], FnInfo] = {}
+        self.calls: List[CallSite] = []
+        self._index()
+        self.traced: Set[FnInfo] = self._traced_closure()
+
+    @classmethod
+    def from_paths(cls, paths: Sequence[str]) -> "Project":
+        files: List[str] = []
+        for p in paths:
+            if os.path.isfile(p):
+                files.append(p)
+                continue
+            for root, dirs, names in os.walk(p):
+                dirs[:] = [d for d in dirs
+                           if d not in ("__pycache__", ".git")]
+                files.extend(os.path.join(root, n)
+                             for n in names if n.endswith(".py"))
+        return cls([Module(f) for f in sorted(set(files))])
+
+    # ---- indexing ------------------------------------------------------
+    def _index(self):
+        for mod in self.modules:
+            self._index_module(mod)
+
+    def _index_module(self, mod: Module):
+        project = self
+
+        class V(ast.NodeVisitor):
+            def __init__(self):
+                self.scope = _Scope(None)
+                self.fn_stack: List[Optional[FnInfo]] = [None]
+                self.class_stack: List[str] = []
+
+            def _qual(self, name: str) -> str:
+                parts = self.class_stack + [name]
+                enc = self.fn_stack[-1]
+                if enc is not None and not self.class_stack:
+                    return f"{enc.qual}.{name}"
+                return ".".join(parts)
+
+            def visit_ClassDef(self, node: ast.ClassDef):
+                self.class_stack.append(node.name)
+                self.generic_visit(node)
+                self.class_stack.pop()
+
+            def _visit_fn(self, node):
+                info = FnInfo(mod, self._qual(node.name), node,
+                              self.fn_stack[-1])
+                project.functions[info.key] = info
+                self.scope.names[node.name] = info
+                saved_classes = self.class_stack
+                self.class_stack = []
+                self.scope = _Scope(self.scope)
+                self.fn_stack.append(info)
+                self.generic_visit(node)
+                self.fn_stack.pop()
+                self.scope = self.scope.parent
+                self.class_stack = saved_classes
+
+            visit_FunctionDef = _visit_fn
+            visit_AsyncFunctionDef = _visit_fn
+
+            def visit_Call(self, node: ast.Call):
+                project.calls.append(CallSite(
+                    call=node, callee=mod.resolve_dotted(node.func),
+                    enclosing=self.fn_stack[-1]))
+                self.generic_visit(node)
+
+        v = V()
+        # attach the scope resolver for later passes
+        v.visit(mod.tree)
+        mod._scope = v.scope             # module-level name -> FnInfo
+
+    # ---- traced-set computation ---------------------------------------
+    @staticmethod
+    def _is_trace_inducer(callee: Optional[str]) -> bool:
+        if not callee:
+            return False
+        if callee in TRACE_INDUCERS:
+            return True
+        return any(callee.endswith(s) for s in TRACE_INDUCER_SUFFIXES)
+
+    def _fn_args_of(self, site: CallSite) -> List[FnInfo]:
+        """Function-valued arguments of a call, resolved lexically."""
+        out: List[FnInfo] = []
+        args = list(site.call.args) + [kw.value for kw in site.call.keywords]
+        for a in args:
+            # functools.partial(kernel, ...) wrapping
+            if isinstance(a, ast.Call):
+                callee = site.call and a.func
+                dn = site and self._dotted(site, callee)
+                if dn and dn.endswith("partial") and a.args:
+                    a = a.args[0]
+            fn = self._resolve_fn_ref(site, a)
+            if fn is not None:
+                out.append(fn)
+        return out
+
+    def _dotted(self, site: CallSite, expr) -> Optional[str]:
+        mod = (site.enclosing.module if site.enclosing
+               else self._module_of_call(site))
+        return mod.resolve_dotted(expr) if mod else None
+
+    def _module_of_call(self, site: CallSite) -> Optional[Module]:
+        for m in self.modules:
+            if site.call in ast.walk(m.tree):
+                return m
+        return None
+
+    def _resolve_fn_ref(self, site: CallSite,
+                        expr: ast.expr) -> Optional[FnInfo]:
+        if not isinstance(expr, ast.Name):
+            return None
+        # walk up the enclosing functions' lexical scopes
+        enc = site.enclosing
+        mod = enc.module if enc else None
+        if mod is None:
+            for m in self.modules:
+                if hasattr(m, "_scope") and m._scope.lookup(expr.id):
+                    return m._scope.lookup(expr.id)
+            return None
+        # nested function names live in the module's scope tree; search
+        # all functions of this module whose simple name matches and
+        # whose parent chain includes the enclosing function
+        candidates = [f for f in self.functions.values()
+                      if f.module is mod
+                      and f.qual.split(".")[-1] == expr.id]
+        for c in candidates:
+            p = c.parent
+            while p is not None:
+                if p == enc:
+                    return c
+                p = p.parent
+        # fall back: module-level def, or imported repo function
+        top = mod._scope.lookup(expr.id) if hasattr(mod, "_scope") else None
+        if top is not None:
+            return top
+        dn = mod.aliases.get(expr.id)
+        if dn:
+            return self.lookup_dotted(dn)
+        return None
+
+    def lookup_dotted(self, dotted: str) -> Optional[FnInfo]:
+        """Find a repo function by fully-qualified dotted name."""
+        parts = dotted.split(".")
+        for cut in range(len(parts) - 1, 0, -1):
+            key = (".".join(parts[:cut]), ".".join(parts[cut:]))
+            if key in self.functions:
+                return self.functions[key]
+        return None
+
+    def _callees_of(self, fn: FnInfo) -> Set[FnInfo]:
+        out: Set[FnInfo] = set()
+        for site in self.calls:
+            if site.enclosing != fn or not site.callee:
+                continue
+            callee = site.callee
+            if callee.startswith("self."):
+                # method call on the own class
+                cls = fn.qual.split(".")[0]
+                target = self.functions.get(
+                    (fn.module.modname, f"{cls}.{callee[5:]}"))
+            else:
+                target = self.lookup_dotted(callee)
+                if target is None and "." not in callee:
+                    target = self.functions.get((fn.module.modname, callee))
+            if target is not None:
+                out.add(target)
+        return out
+
+    def _traced_closure(self) -> Set[FnInfo]:
+        entries: Set[FnInfo] = set()
+        for site in self.calls:
+            if self._is_trace_inducer(site.callee):
+                entries.update(self._fn_args_of(site))
+        # decorator-induced tracing: @jax.jit / @partial(jax.jit, ...)
+        for fn in self.functions.values():
+            node = fn.node
+            for dec in getattr(node, "decorator_list", []):
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                dn = fn.module.resolve_dotted(target)
+                if dn and dn.endswith("partial") and isinstance(dec, ast.Call) \
+                        and dec.args:
+                    dn = fn.module.resolve_dotted(dec.args[0])
+                if self._is_trace_inducer(dn):
+                    entries.add(fn)
+        seen = set(entries)
+        frontier = list(entries)
+        while frontier:
+            fn = frontier.pop()
+            for callee in self._callees_of(fn):
+                if callee not in seen:
+                    seen.add(callee)
+                    frontier.append(callee)
+        return seen
+
+    # ---- running checkers ---------------------------------------------
+    def run(self, checkers: Sequence[Checker]) -> List[Finding]:
+        by_path = {m.path: m for m in self.modules}
+        out: List[Finding] = []
+        for c in checkers:
+            for f in c.run(self):
+                mod = by_path.get(f.path)
+                if mod is not None and mod.suppressed(f.check, f.line):
+                    continue
+                out.append(f)
+        return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# Small shared helpers
+# ---------------------------------------------------------------------------
+
+def eval_const(expr: ast.expr, env: Dict[str, int]) -> Optional[int]:
+    """Fold an integer constant expression (literals, names from
+    ``env``, + - * // / % ** and unary -); ``None`` if not constant."""
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, int):
+        return expr.value
+    if isinstance(expr, ast.Name):
+        return env.get(expr.id)
+    if isinstance(expr, ast.UnaryOp) and isinstance(expr.op, ast.USub):
+        v = eval_const(expr.operand, env)
+        return None if v is None else -v
+    if isinstance(expr, ast.BinOp):
+        a = eval_const(expr.left, env)
+        b = eval_const(expr.right, env)
+        if a is None or b is None:
+            return None
+        op = expr.op
+        if isinstance(op, ast.Add):
+            return a + b
+        if isinstance(op, ast.Sub):
+            return a - b
+        if isinstance(op, ast.Mult):
+            return a * b
+        if isinstance(op, (ast.FloorDiv, ast.Div)):
+            return a // b if b else None
+        if isinstance(op, ast.Mod):
+            return a % b if b else None
+        if isinstance(op, ast.Pow):
+            return a ** b
+    return None
+
+
+def module_int_constants(mod: Module) -> Dict[str, int]:
+    """Module-level ``NAME = <int expr>`` assignments, constant-folded
+    in source order (later names may reference earlier ones)."""
+    env: Dict[str, int] = {}
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            v = eval_const(node.value, env)
+            if v is not None:
+                env[node.targets[0].id] = v
+    return env
+
+
+def str_literals(expr: ast.expr) -> List[str]:
+    """String literals inside a tuple/list/set display (or a lone str)."""
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, str):
+        return [expr.value]
+    if isinstance(expr, (ast.Tuple, ast.List, ast.Set)):
+        out = []
+        for e in expr.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+        return out
+    return []

@@ -1,0 +1,263 @@
+"""Donation-discipline pass (``donation``).
+
+``jax.jit(..., donate_argnums=...)`` invalidates the donated buffer the
+moment the jitted call runs; reading the old reference afterwards
+returns garbage (or raises on some backends) -- the PR 2 bug class,
+where a donated carry was reused to compute a post-hoc metric.
+
+The pass is repo-aware in two steps:
+
+1. **Donating factories**: any repo function whose returned value is a
+   ``jax.jit(..., donate_argnums=<literal>)`` call (directly or via a
+   local assignment) is itself treated as donating at the same
+   positions -- so ``sim = make_sim_fn(...)`` is tracked exactly like a
+   raw jit.
+2. **Per-function linear scan**: names bound to a donating callable
+   (locals *and* ``self.<attr>`` class attributes) mark their
+   donated-position argument names dead after each call statement --
+   unless the same statement rebinds them, the canonical
+   ``state, out = sim(state, inputs)`` pattern.  A later read of a
+   dead name is a finding.  ``if``/``else`` branches are merged by
+   intersection (a name must die on *all* paths to stay dead), keeping
+   the pass false-positive-free at the cost of missing some
+   single-branch bugs.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .core import Checker, Finding, FnInfo, Module, Project
+
+NAME = "donation"
+
+
+def _donated_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """Literal donate_argnums of a jit call, else None."""
+    for kw in call.keywords:
+        if kw.arg not in ("donate_argnums", "donate_argnames"):
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out = []
+            for e in v.elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                    out.append(e.value)
+            return tuple(out)
+    return None
+
+
+def _is_jit(mod: Module, call: ast.Call) -> bool:
+    dn = mod.resolve_dotted(call.func)
+    return bool(dn) and (dn == "jax.jit" or dn.endswith(".jit"))
+
+
+def _assign_target_names(stmt: ast.stmt) -> Set[str]:
+    out: Set[str] = set()
+    targets: List[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)) \
+            and stmt.target is not None:
+        targets = [stmt.target]
+
+    def flat(t):
+        if isinstance(t, ast.Name):
+            out.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                flat(e)
+        elif isinstance(t, ast.Starred):
+            flat(t.value)
+    for t in targets:
+        flat(t)
+    return out
+
+
+class _Donors:
+    """What names/attributes donate, discovered project-wide."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        # factory function -> donated positions
+        self.factories: Dict[Tuple[str, str], Tuple[int, ...]] = {}
+        # (modname, Class, attr) -> donated positions
+        self.class_attrs: Dict[Tuple[str, str, str], Tuple[int, ...]] = {}
+        self._find_factories()
+        self._find_class_attrs()
+
+    def _find_factories(self):
+        for fn in self.project.functions.values():
+            pos = self._factory_positions(fn)
+            if pos:
+                self.factories[fn.key] = pos
+
+    def _factory_positions(self, fn: FnInfo) -> Optional[Tuple[int, ...]]:
+        mod = fn.module
+        jit_locals: Dict[str, Tuple[int, ...]] = {}
+        for stmt in ast.walk(fn.node):
+            if isinstance(stmt, ast.Assign) \
+                    and isinstance(stmt.value, ast.Call) \
+                    and _is_jit(mod, stmt.value):
+                pos = _donated_positions(stmt.value)
+                if pos:
+                    for name in _assign_target_names(stmt):
+                        jit_locals[name] = pos
+            if isinstance(stmt, ast.Return) and stmt.value is not None:
+                v = stmt.value
+                if isinstance(v, ast.Call) and _is_jit(mod, v):
+                    pos = _donated_positions(v)
+                    if pos:
+                        return pos
+                if isinstance(v, ast.Name) and v.id in jit_locals:
+                    return jit_locals[v.id]
+        return None
+
+    def positions_for_value(self, mod: Module,
+                            value: ast.expr) -> Optional[Tuple[int, ...]]:
+        """Donated positions if `value` evaluates to a donating callable."""
+        if not isinstance(value, ast.Call):
+            return None
+        if _is_jit(mod, value):
+            return _donated_positions(value)
+        dn = mod.resolve_dotted(value.func)
+        if not dn:
+            return None
+        target = self.project.lookup_dotted(dn)
+        if target is None and "." not in dn:
+            target = self.project.functions.get((mod.modname, dn))
+        if target is not None and target.key in self.factories:
+            return self.factories[target.key]
+        return None
+
+    def _find_class_attrs(self):
+        for fn in self.project.functions.values():
+            if "." not in fn.qual:
+                continue
+            cls = fn.qual.split(".")[0]
+            for stmt in ast.walk(fn.node):
+                if not isinstance(stmt, ast.Assign):
+                    continue
+                pos = self.positions_for_value(fn.module, stmt.value)
+                if not pos:
+                    continue
+                for t in stmt.targets:
+                    if isinstance(t, ast.Attribute) \
+                            and isinstance(t.value, ast.Name) \
+                            and t.value.id == "self":
+                        self.class_attrs[
+                            (fn.module.modname, cls, t.attr)] = pos
+
+
+class DonationChecker(Checker):
+    name = NAME
+    description = ("reads of buffers already donated to a "
+                   "jit(donate_argnums=...) call")
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        donors = _Donors(project)
+        for fn in project.functions.values():
+            yield from self._scan_fn(fn, donors)
+
+    def _scan_fn(self, fn: FnInfo, donors: _Donors) -> Iterable[Finding]:
+        mod = fn.module
+        cls = fn.qual.split(".")[0] if "." in fn.qual else None
+        local_donors: Dict[str, Tuple[int, ...]] = {}
+        findings: List[Finding] = []
+        self._scan_block(list(getattr(fn.node, "body", [])), set(),
+                         local_donors, donors, mod, cls, findings)
+        return findings
+
+    def _donating_call(self, call: ast.Call, local: Dict,
+                       donors: _Donors, mod: Module,
+                       cls: Optional[str]) -> Optional[Tuple[int, ...]]:
+        f = call.func
+        if isinstance(f, ast.Name) and f.id in local:
+            return local[f.id]
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+                and f.value.id == "self" and cls:
+            return donors.class_attrs.get((mod.modname, cls, f.attr))
+        return None
+
+    def _scan_block(self, stmts: List[ast.stmt], dead: Set[str],
+                    local: Dict[str, Tuple[int, ...]], donors: _Donors,
+                    mod: Module, cls: Optional[str],
+                    findings: List[Finding]):
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            rebound = _assign_target_names(stmt)
+
+            # only this statement's *own* expressions are examined here;
+            # nested statement lists (if/for bodies) are scanned
+            # recursively so their rebindings are tracked correctly
+            if isinstance(stmt, (ast.If, ast.While)):
+                own_exprs: List[ast.AST] = [stmt.test]
+            elif isinstance(stmt, ast.For):
+                own_exprs = [stmt.iter]
+            elif isinstance(stmt, ast.With):
+                own_exprs = [i.context_expr for i in stmt.items]
+            elif isinstance(stmt, ast.Try):
+                own_exprs = []
+            else:
+                own_exprs = [stmt]
+
+            donated_here: Set[str] = set()
+            for expr in own_exprs:
+                for node in ast.walk(expr):
+                    if isinstance(node, ast.Call):
+                        pos = self._donating_call(node, local, donors,
+                                                  mod, cls)
+                        if pos:
+                            for p in pos:
+                                if p < len(node.args) and isinstance(
+                                        node.args[p], ast.Name):
+                                    donated_here.add(node.args[p].id)
+                    if isinstance(node, ast.Name) \
+                            and isinstance(node.ctx, ast.Load) \
+                            and node.id in dead:
+                        findings.append(Finding(
+                            mod.path, node.lineno, self.name,
+                            f"`{node.id}` was donated to a jitted call "
+                            "above (donate_argnums) -- its buffer is "
+                            "invalidated; rebind the result instead"))
+
+            # new donor bindings
+            if isinstance(stmt, ast.Assign):
+                pos = donors.positions_for_value(mod, stmt.value)
+                if pos:
+                    for name in rebound:
+                        local[name] = pos
+
+            if isinstance(stmt, ast.If):
+                d1, d2 = set(dead), set(dead)
+                self._scan_block(list(stmt.body), d1, local, donors,
+                                 mod, cls, findings)
+                self._scan_block(list(stmt.orelse), d2, local, donors,
+                                 mod, cls, findings)
+                dead.clear()
+                dead |= (d1 & d2)
+            elif isinstance(stmt, (ast.For, ast.While)):
+                self._scan_block(list(stmt.body), set(dead), local,
+                                 donors, mod, cls, findings)
+            elif isinstance(stmt, ast.With):
+                self._scan_block(list(stmt.body), dead, local, donors,
+                                 mod, cls, findings)
+            elif isinstance(stmt, ast.Try):
+                self._scan_block(list(stmt.body), dead, local, donors,
+                                 mod, cls, findings)
+                for h in stmt.handlers:
+                    self._scan_block(list(h.body), set(dead), local,
+                                     donors, mod, cls, findings)
+                self._scan_block(list(stmt.orelse), dead, local, donors,
+                                 mod, cls, findings)
+                self._scan_block(list(stmt.finalbody), dead, local,
+                                 donors, mod, cls, findings)
+
+            # a donated name dies unless this very statement rebinds it
+            dead |= (donated_here - rebound)
+            dead -= rebound

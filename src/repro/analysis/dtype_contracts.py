@@ -1,0 +1,183 @@
+"""Dtype/overflow contract pass (``dtype-bounds``).
+
+The compressed synapse tables trade bytes for invariants: int16 in-tile
+target ids are only sound while ``n_local < 2**15``, bfloat16 weights
+are only value-exact because every *accumulation* happens in float32,
+and ``core/``/``kernels/`` stay float32-first so a stray float64
+promotion can't silently double the memory envelope (or diverge from
+the TPU path, which has no f64).  Three sub-checks:
+
+1. **int16 bound, cross-checked against committed configs**: for every
+   grid x law case in ``repro.configs.snn`` (paper Table 1 grids plus
+   the reduced test case) over a sweep of committed tilings, if the
+   derived ``TableStorage`` selects int16 target ids then the tile's
+   ``n_local`` must fit; runs the *real* constructors at lint time so
+   the check can never drift from the code (skipped, not failed, if
+   the repo isn't importable).  A ``TableStorage(tgt_dtype="int16")``
+   literal outside ``core/synapses.py`` is flagged statically: storage
+   must come from ``spec.storage()``/``from_meta`` so the bound is
+   derived, never asserted by hand.
+2. **No accumulation in a storage dtype**: reductions / contractions
+   (``jnp.sum``, ``dot``, ``matmul``, ``einsum``, ``cumsum``,
+   ``dot_general``, ``.at[].add``) whose operand is visibly cast to a
+   16-bit dtype in the same expression.
+3. **No float64 in ``core/``/``kernels/``**: any ``float64`` mention
+   (attribute, string dtype, ``astype(float)``); host-side analytic
+   code that *needs* f64 precision carries an explicit pragma.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .core import Checker, Finding, Module, Project
+
+NAME = "dtype-bounds"
+
+_ACCUM_CALLS = ("jax.numpy.sum", "jax.numpy.dot", "jax.numpy.matmul",
+                "jax.numpy.einsum", "jax.numpy.cumsum", "jax.numpy.prod",
+                "jax.numpy.mean", "jax.lax.dot_general", "jax.lax.dot")
+_STORAGE_DTYPES = {"bfloat16", "float16", "int16", "int8", "uint8"}
+_F32_FIRST_DIRS = ("/core/", "/kernels/")
+_TILINGS = ((1, 1), (1, 2), (2, 2), (4, 4), (8, 8))
+
+
+def _is_f32_first(mod: Module) -> bool:
+    p = mod.path.replace("\\", "/")
+    return "src/repro" in p and any(d in p for d in _F32_FIRST_DIRS)
+
+
+def _casts_to_storage_dtype(expr: ast.expr, mod: Module) -> bool:
+    """True if the expression visibly casts to a 16/8-bit dtype."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "astype" and node.args:
+            a = node.args[0]
+            if isinstance(a, ast.Constant) and a.value in _STORAGE_DTYPES:
+                return True
+            dn = mod.resolve_dotted(a)
+            if dn and dn.split(".")[-1] in _STORAGE_DTYPES:
+                return True
+    return False
+
+
+class DtypeContractsChecker(Checker):
+    name = NAME
+    description = ("int16 target-id bound vs committed configs, no "
+                   "accumulation in storage dtypes, no float64 in "
+                   "core//kernels/")
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        for mod in project.modules:
+            if _is_f32_first(mod):
+                yield from self._no_float64(mod)
+            yield from self._no_storage_accum(mod)
+            yield from self._no_handmade_int16(mod)
+        yield from self._int16_bound_vs_configs(project)
+
+    # ---- float64 ------------------------------------------------------
+    def _no_float64(self, mod: Module) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Attribute) and node.attr == "float64":
+                yield Finding(
+                    mod.path, node.lineno, self.name,
+                    "float64 in core//kernels/: f32-first contract "
+                    "(TPU has no f64; doubles the memory envelope)")
+            elif isinstance(node, ast.Constant) and node.value == "float64":
+                yield Finding(
+                    mod.path, node.lineno, self.name,
+                    '"float64" dtype string in core//kernels/: '
+                    "f32-first contract")
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "astype" and node.args and \
+                    isinstance(node.args[0], ast.Name) and \
+                    node.args[0].id == "float":
+                yield Finding(
+                    mod.path, node.lineno, self.name,
+                    "astype(float) promotes to float64 on host numpy")
+
+    # ---- accumulation in storage dtype --------------------------------
+    def _no_storage_accum(self, mod: Module) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = mod.resolve_dotted(node.func)
+            is_accum = dn in _ACCUM_CALLS
+            # x.at[idx].add(v) scatter-accumulation
+            if not is_accum and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("add", "sum") \
+                    and isinstance(node.func.value, ast.Subscript):
+                sub = node.func.value.value
+                is_accum = isinstance(sub, ast.Attribute) \
+                    and sub.attr == "at"
+            if not is_accum:
+                continue
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            for a in args:
+                if _casts_to_storage_dtype(a, mod):
+                    yield Finding(
+                        mod.path, node.lineno, self.name,
+                        "accumulation over a value cast to a storage "
+                        "dtype: cast to float32 *after* the reduction "
+                        "(bf16 partial sums are not value-exact)")
+                    break
+
+    # ---- hand-built int16 storage -------------------------------------
+    def _no_handmade_int16(self, mod: Module) -> Iterable[Finding]:
+        if mod.path.replace("\\", "/").endswith("core/synapses.py"):
+            return
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = mod.resolve_dotted(node.func)
+            if not dn or dn.split(".")[-1] != "TableStorage":
+                continue
+            for kw in node.keywords:
+                if kw.arg == "tgt_dtype" and \
+                        isinstance(kw.value, ast.Constant) and \
+                        kw.value.value == "int16":
+                    yield Finding(
+                        mod.path, node.lineno, self.name,
+                        "hand-built TableStorage(tgt_dtype='int16'): "
+                        "the n_local < 2**15 bound is only checked by "
+                        "spec.storage()/TableStorage.from_meta -- "
+                        "derive storage, don't assert it")
+
+    # ---- the live bound vs every committed config ---------------------
+    def _int16_bound_vs_configs(self, project: Project) \
+            -> Iterable[Finding]:
+        try:
+            from repro.configs import snn as snn_configs
+        except ImportError:
+            return                       # lint run outside the repo env
+        cfg_mod = next(
+            (m for m in project.modules
+             if m.path.replace("\\", "/").endswith("configs/snn.py")),
+            None)
+        if cfg_mod is None:
+            return                       # configs not in the lint scope
+        cases = dict(snn_configs.CASES)
+        cases["reduced"] = snn_configs.reduced_case()
+        for cname, case in sorted(cases.items()):
+            for ty, tx in _TILINGS:
+                if case.grid[0] % ty or case.grid[1] % tx:
+                    continue
+                try:
+                    spec = case.engine_config(ty, tx).spec()
+                    storage = spec.storage()
+                except Exception as e:  # noqa: BLE001 - report, don't crash
+                    yield Finding(
+                        cfg_mod.path, 1, self.name,
+                        f"config {cname} @ {ty}x{tx} failed to "
+                        f"construct during bound check: {e!r}")
+                    continue
+                if storage.tgt_dtype == "int16" \
+                        and spec.n_local >= 2 ** 15:
+                    yield Finding(
+                        cfg_mod.path, 1, self.name,
+                        f"config {cname} @ {ty}x{tx}: int16 target ids "
+                        f"but n_local={spec.n_local} >= 2**15 -- "
+                        "in-tile ids overflow")

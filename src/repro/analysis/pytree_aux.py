@@ -1,0 +1,121 @@
+"""Pytree static-aux hygiene pass (``pytree-aux``).
+
+The aux_data half of ``tree_flatten`` is *static*: jit treats it as
+part of the function signature, so it must be hashable and cheaply
+``__eq__``-comparable.  A dict/list/set aux either raises
+``unhashable type`` at the first jit boundary or -- worse, with custom
+containers -- hashes by identity and silently retriggers compilation
+every call.  The repo's own pytrees (``SynapseTables`` carrying a
+frozen ``TableStorage``, ``SimInputs`` carrying ``None``) are the
+model: aux is a frozen dataclass or nothing.
+
+Flags, for every class registered via ``register_pytree_node_class``
+(and flatten functions passed to ``register_pytree_node``): a
+``tree_flatten`` whose returned aux element is a mutable display
+(``{...}``, ``[...]``) or a ``dict()``/``list()``/``set()`` call.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from .core import Checker, Finding, Module, Project
+
+NAME = "pytree-aux"
+
+_MUTABLE_CALLS = {"dict", "list", "set", "bytearray"}
+
+
+def _aux_expr_of_flatten(fn: ast.AST) -> Optional[ast.expr]:
+    """The aux element of `return children, aux` (last return wins)."""
+    aux = None
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) \
+                and isinstance(node.value, ast.Tuple) \
+                and len(node.value.elts) == 2:
+            aux = node.value.elts[1]
+    return aux
+
+
+def _mutable_reason(mod: Module, expr: ast.expr) -> Optional[str]:
+    if isinstance(expr, ast.Dict):
+        return "a dict literal"
+    if isinstance(expr, (ast.List, ast.ListComp)):
+        return "a list"
+    if isinstance(expr, (ast.Set, ast.SetComp, ast.DictComp)):
+        return "a set/dict comprehension"
+    if isinstance(expr, ast.Call):
+        dn = mod.resolve_dotted(expr.func)
+        if dn in _MUTABLE_CALLS:
+            return f"a {dn}() call"
+    return None
+
+
+class PytreeAuxChecker(Checker):
+    name = NAME
+    description = ("registered pytrees must return hashable (frozen) "
+                   "aux data from tree_flatten")
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        for mod in project.modules:
+            yield from self._decorated_classes(mod)
+            yield from self._functional_registrations(mod, project)
+
+    def _decorated_classes(self, mod: Module) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            registered = any(
+                (dn := mod.resolve_dotted(
+                    d.func if isinstance(d, ast.Call) else d))
+                and dn.split(".")[-1] == "register_pytree_node_class"
+                for d in node.decorator_list)
+            if not registered:
+                continue
+            flatten = next((s for s in node.body
+                            if isinstance(s, ast.FunctionDef)
+                            and s.name == "tree_flatten"), None)
+            if flatten is None:
+                yield Finding(
+                    mod.path, node.lineno, self.name,
+                    f"{node.name} registered as a pytree but defines "
+                    "no tree_flatten")
+                continue
+            yield from self._check_flatten(mod, node.name, flatten)
+
+    def _functional_registrations(self, mod: Module,
+                                  project: Project) -> Iterable[Finding]:
+        for site in project.calls:
+            if site.enclosing is not None and site.enclosing.module is not mod:
+                continue
+            call = site.call
+            dn = mod.resolve_dotted(call.func)
+            if not dn or dn.split(".")[-1] != "register_pytree_node":
+                continue
+            if call not in {c.call for c in project.calls
+                            if c.enclosing is None
+                            or c.enclosing.module is mod}:
+                continue
+            if len(call.args) < 2 or not isinstance(call.args[1], ast.Name):
+                continue
+            flatten_fn = next(
+                (f.node for f in project.functions.values()
+                 if f.module is mod
+                 and f.qual.split(".")[-1] == call.args[1].id), None)
+            if flatten_fn is not None:
+                yield from self._check_flatten(
+                    mod, f"pytree via {call.args[1].id}", flatten_fn)
+
+    def _check_flatten(self, mod: Module, owner: str,
+                       flatten: ast.AST) -> Iterable[Finding]:
+        aux = _aux_expr_of_flatten(flatten)
+        if aux is None:
+            return
+        reason = _mutable_reason(mod, aux)
+        if reason:
+            yield Finding(
+                mod.path, aux.lineno, self.name,
+                f"{owner}.tree_flatten returns {reason} as aux_data: "
+                "jit hashes aux as a static argument -- use a frozen "
+                "dataclass, tuple, or None")

@@ -1,0 +1,248 @@
+"""Tracer-purity pass (``tracer-purity``).
+
+Determinism underpins bit-identical resume: a host RNG draw, wall-clock
+read, or Python-level branch on a traced array inside jitted/scanned
+code either breaks reproducibility or fails at trace time in a way unit
+tests at small sizes may never exercise.  Two families of findings:
+
+1. **Inside the traced set** (functions reachable from ``jax.jit`` /
+   ``lax.scan`` / ``shard_map`` / ``pallas_call`` bodies): any call
+   into ``numpy.random`` / stdlib ``random`` / ``time`` / ``datetime``,
+   host I/O (``open``/``print``/``np.save``/``json.dump``/...), and
+   Python ``if``/``while``/``assert``/``bool()``/``.item()`` on a
+   value produced by a jax op (light taint propagation through local
+   assignments; ``.shape``/``.dtype``/``len()`` reads do not taint).
+
+2. **Anywhere**: *unseeded* host RNG -- legacy ``np.random.<fn>``
+   module-level draws and ``np.random.default_rng()`` with no seed,
+   plus stdlib ``random`` draws -- which silently break per-seed
+   deterministic table realizations even in host-side build code.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from .core import Checker, Finding, FnInfo, Module, Project
+
+NAME = "tracer-purity"
+
+_HOST_MODULE_PREFIXES = ("numpy.random.", "random.", "time.", "datetime.")
+_HOST_IO_CALLS = {"open", "print", "input"}
+_HOST_IO_PREFIXES = ("os.", "json.dump", "json.load", "pickle.",
+                     "numpy.save", "numpy.load", "numpy.savez",
+                     "builtins.open", "builtins.print", "shutil.",
+                     "pathlib.")
+# jax namespaces whose call results are traced values
+_TAINT_SOURCES = ("jax.numpy.", "jax.lax.", "jax.random.", "jax.nn.",
+                  "jax.scipy.", "jax.ops.")
+# attribute reads that yield static (python) values even on tracers
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "sharding", "aval"}
+_STATIC_CALLS = {"len", "isinstance", "type", "getattr", "hasattr"}
+
+_LEGACY_NP_RANDOM = {
+    "rand", "randn", "randint", "random", "random_sample", "normal",
+    "uniform", "choice", "shuffle", "permutation", "seed",
+    "standard_normal", "poisson", "binomial", "exponential", "gamma",
+    "beta",
+}
+_STDLIB_RANDOM = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "seed", "betavariate",
+    "expovariate", "vonmisesvariate",
+}
+
+
+def _fn_body(fn: FnInfo) -> List[ast.stmt]:
+    return list(getattr(fn.node, "body", []))
+
+
+def _walk_skip_nested(stmts: Iterable[ast.stmt]):
+    """Walk statements without descending into nested function defs
+    (those are separate FnInfos, analyzed if themselves traced)."""
+    for stmt in stmts:
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and node is not stmt:
+                continue
+            yield node
+
+
+class _Taint:
+    """Very light flow-insensitive-within-branches taint tracker."""
+
+    def __init__(self, mod: Module):
+        self.mod = mod
+        self.tainted: Set[str] = set()
+
+    def tainted_names_in(self, expr: ast.expr) -> List[ast.Name]:
+        out: List[ast.Name] = []
+        self._scan(expr, out)
+        return out
+
+    def _scan(self, node: ast.AST, out: List[ast.Name]):
+        if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+            return                       # x.shape is static
+        if isinstance(node, ast.Call):
+            dn = self.mod.resolve_dotted(node.func)
+            if dn in _STATIC_CALLS:
+                return                   # len(x) / isinstance(x, T)
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                and node.id in self.tainted:
+            out.append(node)
+            return
+        for child in ast.iter_child_nodes(node):
+            self._scan(child, out)
+
+    def value_is_traced(self, expr: ast.expr) -> bool:
+        if isinstance(expr, ast.Call):
+            dn = self.mod.resolve_dotted(expr.func)
+            if dn and any(dn.startswith(p) for p in _TAINT_SOURCES):
+                return True
+        return bool(self.tainted_names_in(expr))
+
+    def assign(self, targets: Iterable[ast.expr], traced: bool):
+        for t in targets:
+            if isinstance(t, ast.Name):
+                (self.tainted.add if traced
+                 else self.tainted.discard)(t.id)
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                self.assign(t.elts, traced)
+
+
+class TracerPurityChecker(Checker):
+    name = NAME
+    description = ("host RNG/time/IO calls and Python branches on "
+                   "traced values inside jit/scan-reachable code; "
+                   "unseeded host RNG anywhere")
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        for mod in project.modules:
+            yield from self._unseeded_rng(mod)
+        for fn in project.traced:
+            yield from self._check_traced_fn(fn)
+
+    # ---- global unseeded-RNG scan -------------------------------------
+    def _unseeded_rng(self, mod: Module) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = mod.resolve_dotted(node.func)
+            if not dn:
+                continue
+            if dn.startswith("numpy.random."):
+                tail = dn[len("numpy.random."):]
+                if tail in _LEGACY_NP_RANDOM:
+                    yield Finding(
+                        mod.path, node.lineno, self.name,
+                        f"legacy np.random.{tail}() draws from hidden "
+                        "global state; use np.random.default_rng(seed)")
+                elif tail == "default_rng" and not node.args \
+                        and not node.keywords:
+                    yield Finding(
+                        mod.path, node.lineno, self.name,
+                        "np.random.default_rng() without a seed breaks "
+                        "deterministic table realization")
+            elif dn.startswith("random.") \
+                    and dn[len("random."):] in _STDLIB_RANDOM:
+                yield Finding(
+                    mod.path, node.lineno, self.name,
+                    f"stdlib {dn}() is unseeded global-state RNG; "
+                    "use np.random.default_rng(seed) or jax.random")
+
+    # ---- traced-set purity --------------------------------------------
+    def _check_traced_fn(self, fn: FnInfo) -> Iterable[Finding]:
+        mod = fn.module
+        taint = _Taint(mod)
+        where = f"traced function {fn.qual}"
+
+        for node in _walk_skip_nested(_fn_body(fn)):
+            if isinstance(node, ast.Call):
+                dn = mod.resolve_dotted(node.func)
+                if dn:
+                    yield from self._host_call(mod, node, dn, where)
+
+        # second sweep, statement-ordered, for the taint checks
+        yield from self._taint_sweep(fn, _fn_body(fn), taint, where)
+
+    def _host_call(self, mod: Module, node: ast.Call, dn: str,
+                   where: str) -> Iterable[Finding]:
+        if any(dn.startswith(p) for p in _HOST_MODULE_PREFIXES):
+            yield Finding(
+                mod.path, node.lineno, self.name,
+                f"{dn}() inside {where}: host RNG/clock calls run at "
+                "trace time, not per step -- nondeterministic resume")
+        elif dn in _HOST_IO_CALLS \
+                or any(dn.startswith(p) for p in _HOST_IO_PREFIXES):
+            yield Finding(
+                mod.path, node.lineno, self.name,
+                f"host I/O {dn}() inside {where}: executes at trace "
+                "time only; use jax.debug.print / io_callback")
+
+    def _taint_sweep(self, fn: FnInfo, stmts: List[ast.stmt],
+                     taint: _Taint, where: str) -> Iterable[Finding]:
+        mod = fn.module
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(stmt, ast.Assign):
+                traced = taint.value_is_traced(stmt.value)
+                yield from self._value_escapes(mod, stmt.value, taint, where)
+                taint.assign(stmt.targets, traced)
+            elif isinstance(stmt, ast.AugAssign):
+                if taint.value_is_traced(stmt.value):
+                    taint.assign([stmt.target], True)
+            elif isinstance(stmt, (ast.If, ast.While)):
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                for name in taint.tainted_names_in(stmt.test):
+                    yield Finding(
+                        mod.path, stmt.lineno, self.name,
+                        f"Python `{kind}` on traced value `{name.id}` in "
+                        f"{where}: use jax.lax.cond/select (or .shape "
+                        "checks) -- a tracer has no runtime truth value")
+                yield from self._taint_sweep(fn, list(stmt.body), taint,
+                                             where)
+                yield from self._taint_sweep(fn, list(stmt.orelse), taint,
+                                             where)
+            elif isinstance(stmt, ast.Assert):
+                for name in taint.tainted_names_in(stmt.test):
+                    yield Finding(
+                        mod.path, stmt.lineno, self.name,
+                        f"`assert` on traced value `{name.id}` in {where}:"
+                        " use checkify or a static (shape/dtype) check")
+            elif isinstance(stmt, ast.For):
+                if taint.value_is_traced(stmt.iter):
+                    yield Finding(
+                        mod.path, stmt.lineno, self.name,
+                        f"Python `for` over a traced value in {where}: "
+                        "unrolls at trace time; use lax.scan/fori_loop")
+                yield from self._taint_sweep(fn, list(stmt.body), taint,
+                                             where)
+            elif isinstance(stmt, (ast.Return, ast.Expr)):
+                value = stmt.value
+                if value is not None:
+                    yield from self._value_escapes(mod, value, taint, where)
+            elif isinstance(stmt, ast.With):
+                yield from self._taint_sweep(fn, list(stmt.body), taint,
+                                             where)
+
+    def _value_escapes(self, mod: Module, expr: ast.expr, taint: _Taint,
+                       where: str) -> Iterable[Finding]:
+        """float()/int()/bool()/.item() force a traced value to host."""
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = mod.resolve_dotted(node.func)
+            if dn in ("float", "int", "bool") and node.args \
+                    and taint.tainted_names_in(node.args[0]):
+                yield Finding(
+                    mod.path, node.lineno, self.name,
+                    f"{dn}() on a traced value in {where}: forces a "
+                    "host transfer at trace time (ConcretizationError)")
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" \
+                    and taint.tainted_names_in(node.func.value):
+                yield Finding(
+                    mod.path, node.lineno, self.name,
+                    f".item() on a traced value in {where}")

@@ -98,7 +98,11 @@ def refuse_meta_drift(meta: dict, mine: dict, keys, where: str):
     """Refuse to resume a checkpoint whose manifest meta disagrees with
     the current config on any of ``keys`` (keys absent from ``meta`` are
     skipped: pre-versioning manifests).  Shared by the drivers so every
-    identity refusal carries the same actionable message."""
+    identity refusal carries the same actionable message.
+
+    Analyzer-checked: repro-lint's ``meta-drift`` pass cross-references
+    every meta key the sim driver writes against the keys validated
+    here (or otherwise read on the restore path)."""
     for key in keys:
         if key in meta and meta[key] != mine[key]:
             raise ValueError(
@@ -146,6 +150,24 @@ def restore_checkpoint(directory: str, step: int, like,
     return tree
 
 
+_THREAD_ASSERTS = False
+
+
+def set_thread_asserts(enabled: bool):
+    """Toggle the sanitizer's owning-thread assertion mode on every
+    ``AsyncWriterThread`` (``--sanitize`` wires this on).  When on,
+    subclasses' non-queue state mutations (``_assert_owner`` call
+    sites: spool offset counters, checkpoint submission) raise if
+    invoked off the constructing thread -- the PR 4 spool-offset race
+    class, made loud instead of silently corrupting manifests."""
+    global _THREAD_ASSERTS
+    _THREAD_ASSERTS = enabled
+
+
+def thread_asserts_enabled() -> bool:
+    return _THREAD_ASSERTS
+
+
 class AsyncWriterThread:
     """Daemon-thread work queue with deferred error surfacing.
 
@@ -154,13 +176,29 @@ class AsyncWriterThread:
     daemon thread calls ``_write(item)``, a failing write is latched and
     re-raised on the next ``_submit``/``wait`` (never swallowed),
     ``wait()`` drains pending work, ``close()`` shuts the thread down.
+
+    Only the queue is thread-safe.  Everything else a subclass keeps
+    (offset counters, snapshot buffers) is owned by the constructing
+    thread; subclasses call ``_assert_owner`` before mutating such
+    state, which raises under ``set_thread_asserts(True)``.
     """
 
     def __init__(self):
         self._q: "queue.Queue" = queue.Queue()
         self._err: Optional[BaseException] = None
+        self._owner = threading.current_thread()
         self._t = threading.Thread(target=self._worker, daemon=True)
         self._t.start()
+
+    def _assert_owner(self, what: str):
+        """Sanitizer hook: non-queue state is single-owner by contract."""
+        if _THREAD_ASSERTS and threading.current_thread() is not self._owner:
+            raise AssertionError(
+                f"{type(self).__name__}.{what} called from thread "
+                f"{threading.current_thread().name!r} but this writer's "
+                f"non-queue state is owned by {self._owner.name!r} -- "
+                "offsets/manifests would race (run without --sanitize "
+                "only if you know the access is synchronized)")
 
     def _write(self, item):
         raise NotImplementedError
@@ -207,6 +245,7 @@ class AsyncCheckpointer(AsyncWriterThread):
         save_checkpoint(self.directory, step, tree, self.keep, meta=meta)
 
     def save(self, step: int, tree, meta: Optional[dict] = None):
+        self._assert_owner("save")
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                  tree)
         self._submit((step, host_tree, meta))

@@ -50,6 +50,8 @@ class ConnectivityLaw:
 
     def prob(self, r_um) -> np.ndarray:
         """Connection probability at distance r (um). Applies the cutoff."""
+        # repro-lint: ignore[dtype-bounds] host-side analytic: p(r) feeds
+        # the deterministic table build, never a device buffer
         r = np.asarray(r_um, dtype=np.float64)
         if self.kind == "gaussian":
             p = self.amplitude * np.exp(-(r ** 2) / (2.0 * self.scale_um ** 2))
@@ -151,6 +153,8 @@ def expected_synapse_counts(
     off = law.stencil_offsets()
     probs = law.offset_probs()
     pairs = (np.maximum(grid_h - np.abs(off[:, 0]), 0)
+             # repro-lint: ignore[dtype-bounds] host analytic: ~1e10-synapse
+             # counts overflow f32's 24-bit integer range
              * np.maximum(grid_w - np.abs(off[:, 1]), 0)).astype(np.float64)
     remote = float((pairs * probs).sum() * n_exc_per_col * n_per_column)
 

@@ -289,7 +289,9 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
     size against the materialized caps.
 
     The state argument is **donated**: callers must rebind to the
-    returned state and drop every other reference.  For arbitrarily long
+    returned state and drop every other reference (analyzer-checked:
+    repro-lint's ``donation`` pass tracks this factory and flags reads
+    of an already-donated argument).  For arbitrarily long
     runs, build once with ``n_steps = segment_steps`` and call
     repeatedly -- the state carries ``t``, so each call continues
     seamlessly where the last segment stopped (this is the segmented

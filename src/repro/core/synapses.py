@@ -310,6 +310,8 @@ class SynapseTableSpec:
         d = self.decomp
         off = self.law.stencil_offsets()
         probs = self.law.offset_probs()
+        # repro-lint: ignore[dtype-bounds] host-side expected-fanout
+        # accumulation; cap sizing must not round before the ceil
         fan = np.zeros((d.region_h, d.region_w), dtype=np.float64)
         r = d.radius
         for (dy, dx), p in zip(off, probs):

@@ -119,7 +119,7 @@ def _apply_cfg_variant(cfg, overrides: dict):
     return dc.replace(cfg, **patch) if patch else cfg
 
 
-def build_cell(arch: str, shape_name: str, mesh, variant: str = None):
+def build_cell(arch: str, shape_name: str, mesh, variant: str | None = None):
     """Returns (step_fn, abstract_args, in_shardings, donate, meta)."""
     from repro.configs import get_config
     from repro.models.config import SHAPES
@@ -184,7 +184,7 @@ def build_cell(arch: str, shape_name: str, mesh, variant: str = None):
             (param_sh, opt_sh, batch_sh), (0, 1), meta)
 
 
-def build_snn_cell(case_name: str, mesh, variant: str = None):
+def build_snn_cell(case_name: str, mesh, variant: str | None = None):
     from repro.configs.snn import CASES
     from repro.core.dist_engine import (DistConfig, SimInputs,
                                         abstract_dist_inputs, make_sim_fn)
@@ -242,7 +242,7 @@ def analytic_memory(abstract_args, shardings, mesh) -> dict:
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
              out_dir: str = RESULTS, force: bool = False,
-             variant: str = None) -> dict:
+             variant: str | None = None) -> dict:
     from repro.launch.mesh import make_production_mesh, mesh_chips
     from repro.perf.hlo_analysis import analyze_hlo
     from repro.perf.roofline import model_flops, roofline_terms

@@ -39,13 +39,31 @@ from repro.parallel.compat import make_mesh
 from repro.runtime import DriverConfig, SimDriver
 
 
+def enable_sanitizers():
+    """Turn on every runtime sanitizer (the ``--sanitize`` flag).
+
+    ``jax_debug_nans`` re-runs any primitive that produced a NaN
+    un-jitted and raises at the exact op; ``jax_check_tracer_leaks``
+    raises when a tracer escapes its trace (e.g. stashed on ``self``
+    from inside a scan body); ``set_thread_asserts`` makes the async
+    writers' single-owner contract loud (see ``AsyncWriterThread``).
+    CI's resume smoke runs one leg under this mode."""
+    import jax
+
+    from repro.checkpoint.store import set_thread_asserts
+    jax.config.update("jax_debug_nans", True)
+    jax.config.update("jax_check_tracer_leaks", True)
+    set_thread_asserts(True)
+
+
 def parse_tiles(spec):
     if spec is None:
         return None
     try:
         ty, tx = (int(p) for p in spec.lower().split("x"))
     except ValueError:
-        raise SystemExit(f"--tiles {spec!r}: expected TYxTX, e.g. 2x1")
+        raise SystemExit(
+            f"--tiles {spec!r}: expected TYxTX, e.g. 2x1") from None
     return ty, tx
 
 
@@ -135,8 +153,16 @@ def main(argv=None):
                     help="LTP amplitude override (with --plastic)")
     ap.add_argument("--stdp-a-minus", type=float, default=None,
                     help="LTD amplitude override (with --plastic)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="debug/CI mode: jax_debug_nans + "
+                         "jax_check_tracer_leaks + owning-thread "
+                         "assertions on the async writers (slower; "
+                         "catches NaNs, leaked tracers and writer "
+                         "races at their origin)")
     args = ap.parse_args(argv)
 
+    if args.sanitize:
+        enable_sanitizers()
     driver = build_driver(args)
     out = driver.run(args.steps)
     t = int(np.max(np.asarray(out["state"]["t"])))

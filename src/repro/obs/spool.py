@@ -108,6 +108,7 @@ class SpikeSpooler(AsyncWriterThread):
         The shard's offset advances *synchronously*, so ``offsets()``
         read immediately after covers this append -- the property the
         checkpoint-manifest snapshot relies on."""
+        self._assert_owner("append")
         steps = np.asarray(steps)
         n = len(steps)
         name = shard_name(tile_y, tile_x)
@@ -126,6 +127,7 @@ class SpikeSpooler(AsyncWriterThread):
     def offsets(self) -> Dict[str, int]:
         """Per-shard event counts covering every ``append`` so far (the
         writes themselves may still be in flight)."""
+        self._assert_owner("offsets")
         return dict(self._counts)
 
     def truncate(self, offsets: Dict[str, int]):
@@ -134,6 +136,7 @@ class SpikeSpooler(AsyncWriterThread):
         Logs absent from ``offsets`` are cut to zero: they belong to a
         timeline the checkpoint does not know about (events appended
         after the checkpoint, possibly under a different tiling)."""
+        self._assert_owner("truncate")
         self.wait()
         for fn in sorted(self._counts):
             path = os.path.join(self.directory, fn)

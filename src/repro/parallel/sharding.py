@@ -54,7 +54,7 @@ class MeshRules:
         try:
             return getattr(self, logical)
         except AttributeError:
-            raise KeyError(f"unknown logical axis {logical!r}")
+            raise KeyError(f"unknown logical axis {logical!r}") from None
 
     def pspec(self, *logical: Optional[str]) -> P:
         return P(*(self.axis(l) for l in logical))

@@ -158,12 +158,14 @@ def _split_rhs(rhs: str) -> Tuple[str, str, str, str]:
     rhs = rhs.strip()
     if rhs.startswith("("):
         depth = 0
+        end = 0
         for i, ch in enumerate(rhs):
             depth += ch == "("
             depth -= ch == ")"
             if depth == 0:
+                end = i
                 break
-        shape_str, rest = rhs[:i + 1], rhs[i + 1:].strip()
+        shape_str, rest = rhs[:end + 1], rhs[end + 1:].strip()
     else:
         sp = rhs.find(" ")
         shape_str, rest = rhs[:sp], rhs[sp + 1:]

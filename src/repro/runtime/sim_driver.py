@@ -225,6 +225,8 @@ class SimDriver(FaultTolerantLoop):
                 "law": e.law.kind, "radius": d.radius, "seed": e.seed,
                 "table_realization": TABLE_REALIZATION_VERSION,
                 "storage": self.storage.meta(),
+                # repro-lint: ignore[meta-drift] report-only: resume is
+                # bit-identical across segment sizes by design
                 "segment_steps": self.step_size,
                 "stdp": (dataclasses.asdict(e.stdp)
                          if self.plastic else None),
@@ -238,6 +240,8 @@ class SimDriver(FaultTolerantLoop):
         # tiling (or spool frontier) the newest on-disk checkpoint does
         # not have
         meta = self._meta()
+        # repro-lint: ignore[meta-drift] report-only running totals; the
+        # resumable base rides (and is validated via) 'metric_base'
         meta["metric_totals"] = self.metric_totals(state)
         if self.spool is not None:
             # the manifest's spool offsets must never reference bytes

@@ -58,6 +58,8 @@ def test_storage_meta_roundtrip():
 
 def test_storage_accum_dtype_is_pinned():
     with pytest.raises(ValueError, match="accum"):
+        # repro-lint: ignore[dtype-bounds] deliberately invalid storage:
+        # the constructor itself must reject a bf16 accumulator
         TableStorage(tgt_dtype="int16", weight_dtype="bfloat16",
                      accum_dtype="bfloat16", cap_local=4, halo_caps=())
 
