@@ -7,8 +7,10 @@ whose work is proportional to synaptic events, exactly like DPSNN.
 
 Also emits ``BENCH_event_delivery.json``: a kernel-vs-XLA A/B of the
 event-delivery hot path (fused Pallas pipeline vs pure-XLA
-``deliver_events``) per connectivity law, so the perf trajectory of the
-kernel layer is machine-readable across PRs.
+``deliver_events``) per connectivity law, plus a fused-vs-two-pass A/B
+of the *plastic* step (one-launch delivery+LTD kernel vs the kernel
+delivery + separate ``stdp_step`` fallback), so the perf trajectory of
+the kernel layer is machine-readable across PRs.
 """
 
 import time
@@ -18,9 +20,11 @@ import numpy as np
 
 from repro.core.connectivity import exponential_law, gaussian_law
 from repro.core.engine import (EngineConfig, build_shard_tables,
-                               init_sim_state, run)
+                               init_plasticity, init_sim_state, run,
+                               simulate)
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.metrics import cost_per_synaptic_event
+from repro.core.stdp import STDPParams
 
 from .common import write_json
 
@@ -182,18 +186,116 @@ def measure_pair(law, grid=8, n_per_col=60, steps=300, reps=3) -> dict:
     return ab
 
 
+def measure_plastic_pair(law, grid=8, n_per_col=60, steps=300,
+                         segment_steps=50, reps=3) -> dict:
+    """Paired fused-vs-two-pass A/B of the plastic step for one law.
+
+    Both arms run the SAME engine config with kernels enabled; the
+    baseline ("twopass") arm is traced with
+    ``kernels.plastic_step.RING_N_MAX`` forced to 0, which routes
+    ``plastic_delivery_stdp`` through its fallback -- the delivery
+    kernel followed by the separate XLA ``stdp_step`` pass, i.e. the
+    pre-fusion plastic step.  The fused arm is the one-launch
+    delivery+LTD kernel.  Routing is resolved at trace time, so the
+    monkeypatch is restored as soon as each arm has compiled.
+
+    Each rep runs ``steps`` as a chain of ``segment_steps``-long jitted
+    calls -- the shape the segmented ``SimDriver`` actually executes
+    (the committed benchmark config is 50-step segments) -- with the
+    arms interleaved per segment so both sample the same machine state
+    (see ``measure_pair``); the reported ratio is the median of
+    per-rep ratios.  ``gc.collect()`` is fenced between timed segments:
+    interpret-mode pallas calls generate enough per-call garbage that a
+    collection landing inside one arm's segment skews the pair by
+    ~1.5x.  Both arms evolve bit-identical dynamics (asserted on the
+    warmup segment's weights) -- the A/B times the step, not the
+    physics.
+    """
+    import gc
+
+    import repro.kernels.plastic_step as ps
+
+    if steps % segment_steps:
+        raise ValueError(f"steps={steps} must be a multiple of "
+                         f"segment_steps={segment_steps}")
+    n_seg = steps // segment_steps
+    d = TileDecomposition(grid=ColumnGrid(grid, grid, n_per_col),
+                          tiles_y=1, tiles_x=1, radius=law.radius)
+    cfg = EngineConfig(decomp=d, law=law, use_kernels="auto",
+                       stdp=STDPParams())
+    tabs = build_shard_tables(cfg)
+    aux = init_plasticity(tabs, cfg)
+
+    def segment(st, tb, traces):
+        aux_seg = dict(aux, traces=traces)
+        (st, tb, traces), _ = simulate(st, tb, cfg, segment_steps,
+                                       plasticity=aux_seg)
+        return st, tb, traces
+
+    orig = ps.RING_N_MAX
+    fns, carries = {}, {}
+    for arm in ("twopass", "fused"):
+        ps.RING_N_MAX = 0 if arm == "twopass" else orig
+        try:
+            fn = jax.jit(segment)
+            # warmup inside the patched region: jit traces (and locks
+            # in the routing) on this first call; run a full rep worth
+            # of segments so the timed window starts at steady state
+            carry = fn(init_sim_state(cfg), tabs, aux["traces"])
+            for _ in range(n_seg - 1):
+                carry = fn(*carry)
+            jax.block_until_ready(carry[0]["t"])
+        finally:
+            ps.RING_N_MAX = orig
+        fns[arm], carries[arm] = fn, carry
+    np.testing.assert_array_equal(
+        np.asarray(carries["twopass"][1]["local"]["w"]),
+        np.asarray(carries["fused"][1]["local"]["w"]),
+        err_msg="fused plastic step diverged from the two-pass "
+                "reference -- the A/B is only meaningful bit-identical")
+
+    times = {"twopass": [], "fused": []}
+    ratios = []
+    for _ in range(reps):
+        rep = {"twopass": 0.0, "fused": 0.0}
+        for _ in range(n_seg):
+            for arm in ("twopass", "fused"):
+                gc.collect()
+                st, tb, tr = carries[arm]
+                t0 = time.perf_counter()
+                out = fns[arm](st, tb, tr)
+                jax.block_until_ready(out[0]["t"])
+                rep[arm] += time.perf_counter() - t0
+                carries[arm] = out
+        for arm in ("twopass", "fused"):
+            times[arm].append(rep[arm])
+        ratios.append(rep["fused"] / max(rep["twopass"], 1e-12))
+    out = {"steps": steps, "segment_steps": segment_steps,
+           "n_synapses": int(tabs["stats"]["n_synapses"])}
+    for arm in ("twopass", "fused"):
+        elapsed = float(np.median(times[arm]))
+        out[arm] = {"elapsed_s": elapsed,
+                    "ms_per_step": round(elapsed / steps * 1e3, 3)}
+    out["fused_vs_twopass_wall_ratio"] = float(np.median(ratios))
+    out["per_rep_ratios"] = [round(r, 4) for r in ratios]
+    return out
+
+
 def bench_event_delivery(grid=8, n_per_col=60, steps=300,
-                         update_root=True) -> dict:
+                         update_root=True, include_plastic=True,
+                         plastic_steps=300) -> dict:
     """Kernel-vs-XLA A/B of the event-delivery hot path per law.
 
     ``kernel`` routes LIF + delivery through the fused Pallas pipeline
     (compiled on TPU, interpret-mode on CPU -- identical code path);
     ``xla`` is the pure-XLA reference; timing is paired (see
-    ``measure_pair``).  Written to
-    ``results/BENCH_event_delivery.json`` (CI artifact) and -- unless
-    ``update_root=False`` -- to the repo-root copy, the committed
-    cross-PR perf trajectory that ``benchmarks.delivery_guard`` gates
-    regressions against.
+    ``measure_pair``).  With ``include_plastic`` the payload gains a
+    ``plastic`` section: the fused one-launch plastic step vs the
+    two-pass fallback per law (see ``measure_plastic_pair``).  Written
+    to ``results/BENCH_event_delivery.json`` (CI artifact) and --
+    unless ``update_root=False`` -- to the repo-root copy, the
+    committed cross-PR perf trajectory that
+    ``benchmarks.delivery_guard`` gates regressions against.
     """
     out = {"backend": jax.default_backend(),
            "interpret": jax.default_backend() != "tpu",
@@ -203,6 +305,12 @@ def bench_event_delivery(grid=8, n_per_col=60, steps=300,
                       ("exponential", exponential_law())):
         out["laws"][name] = measure_pair(law, grid=grid,
                                          n_per_col=n_per_col, steps=steps)
+    if include_plastic:
+        out["plastic"] = {"steps": plastic_steps, "laws": {}}
+        for name, law in (("gaussian", gaussian_law()),
+                          ("exponential", exponential_law())):
+            out["plastic"]["laws"][name] = measure_plastic_pair(
+                law, grid=grid, n_per_col=n_per_col, steps=plastic_steps)
     write_json("BENCH_event_delivery.json", out, also_root=update_root)
     return out
 
@@ -237,9 +345,11 @@ def run_bench(grid=8, steps=400, with_distributed=True) -> dict:
                 / d["gaussian"]["cost_per_event"])
     # update_root=False: the Fig-2 run reports the A/B but must not
     # silently rewrite the committed regression-guard baseline --
-    # refreshing that is an explicit bench_event_delivery() run
-    out["event_delivery_ab"] = bench_event_delivery(grid=grid,
-                                                    update_root=False)
+    # refreshing that is an explicit bench_event_delivery() run.
+    # include_plastic=False: the plastic A/B belongs to the guard
+    # trajectory, not the Fig-2 cost-ratio story
+    out["event_delivery_ab"] = bench_event_delivery(
+        grid=grid, update_root=False, include_plastic=False)
     write_json("fig2.json", out)
     return out
 

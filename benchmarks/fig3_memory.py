@@ -22,7 +22,12 @@ Three sections:
   targets / bfloat16 weights) bytes/synapse.
 - ``laws`` (measured, 8x8x60 single shard): materialized tables per
   law; the committed ``compressed.bytes_per_synapse`` is the guard
-  baseline.  ``reduction_vs_dense`` is the acceptance ratio.
+  baseline.  ``reduction_vs_dense`` is the acceptance ratio.  Each law
+  also carries ``plastic_analytic`` (STDP accounting post fold-away:
+  the scan carry holds the only full-width weights, the static tables
+  keep the int8 mask) and ``carry`` -- the *measured* combined
+  plastic + recording carry buffers of a segmented run, both gated by
+  the memory guard.
 - ``materialized``: a real >= 16x16x60 single-host run (build +
   ``simulate`` for a few steps) proving the compressed tables hold up
   at the next grid size, with its measured bytes/synapse.
@@ -30,11 +35,12 @@ Three sections:
 
 import dataclasses
 
+import jax
 import numpy as np
 
 from repro.configs.snn import CASES, reduced_case
 from repro.core.engine import (build_shard_tables, firing_rate_hz,
-                               init_sim_state, simulate)
+                               init_plasticity, init_sim_state, simulate)
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.metrics import bytes_per_synapse, shard_memory_bytes
 from repro.core.synapses import (SynapseTableSpec, TableStorage,
@@ -80,6 +86,57 @@ def _full(spec, storage, n_synapses) -> dict:
             "bytes_per_synapse": round(mem["total"] / n_synapses, 3)}
 
 
+def _nbytes(tree) -> int:
+    return int(sum(np.asarray(leaf).nbytes
+                   for leaf in jax.tree.leaves(tree)))
+
+
+def measured_carry(case, segment_steps: int = 50) -> dict:
+    """Real buffer bytes of the combined plastic + recording carry.
+
+    Builds the actual single-shard plastic run state at this config --
+    live weight tiers (post fold-away, the carry is the ONLY full-width
+    weight copy), the local pre-trace, post-traces, the inverse
+    (target -> slot) index, and the spike recorder's per-segment buffer
+    at its no-drop default capacity (``active_cap_local *
+    segment_steps``) -- and sums what the buffers really occupy,
+    alongside the ``shard_memory_bytes`` analytic for the same
+    accounting.  This is everything a segmented plastic+recording run
+    holds live beyond the static-run footprint.
+    """
+    from repro.core.stdp import STDPParams
+    from repro.obs.record import init_recorder_state, recorder_spec
+
+    cfg = case.engine_config(1, 1, stdp=STDPParams())
+    tabs = build_shard_tables(cfg)
+    aux = init_plasticity(tabs, cfg)
+    rspec = recorder_spec(cfg, segment_steps)
+    rec = init_recorder_state(rspec)
+    tiers = [tabs["local"]] + list(tabs.get("halo", []))
+    breakdown = {
+        "weight_tiers": _nbytes([t["w"] for t in tiers]),
+        "pre_trace": _nbytes(aux["traces"]["x_pre"][:1]),
+        "post_traces": _nbytes(aux["traces"]["x_post"]),
+        "inverse_index": _nbytes(aux["inv"]),
+        "recorder": _nbytes(rec),
+    }
+    total = sum(breakdown.values())
+    n_syn = int(tabs.stats["n_synapses"])
+    spec = cfg.spec()
+    amem = shard_memory_bytes(spec, tabs.storage, plastic=True,
+                              recorder_capacity=rspec.capacity)
+    analytic = int(amem["plastic"] + amem["recorder"])
+    return {
+        "segment_steps": segment_steps,
+        "recorder_capacity": int(rspec.capacity),
+        "n_synapses": n_syn,
+        "measured": {"breakdown": breakdown, "total": int(total),
+                     "bytes_per_synapse": round(total / n_syn, 3)},
+        "analytic": {"total": analytic,
+                     "bytes_per_synapse": round(analytic / n_syn, 3)},
+    }
+
+
 def measured_law(law_name: str, grid: int = 8,
                  n_per_column: int = 60) -> dict:
     """Materialized single-shard tables for one law: pre-compression
@@ -109,7 +166,10 @@ def measured_law(law_name: str, grid: int = 8,
         / out["compressed"]["bytes_per_synapse"], 3)
     # STDP adds a weight-tier carry + traces + inverse index; plastic
     # specs force float32 weights and halo_floor=0, so account on the
-    # plastic spec, not this one.
+    # plastic spec, not this one.  Post fold-away the carry is the
+    # single full-width weight copy: the static tables' weight leaves
+    # shrink to the int8 mask, and the halo pre-trace replicas are
+    # exchanged per step instead of stored.
     pspec = dataclasses.replace(spec, weight_dtype="float32",
                                 halo_floor=0.0)
     pmem = shard_memory_bytes(pspec, plastic=True)
@@ -118,6 +178,7 @@ def measured_law(law_name: str, grid: int = 8,
         "bytes_per_synapse": round(
             pmem["total"] / pspec.expected_synapses(), 3),
     }
+    out["carry"] = measured_carry(case)
     return out
 
 

@@ -15,7 +15,10 @@ an ~18 MiB block and fail on real hardware.  Checks, per module under
 * every ``pl.BlockSpec((a, b), ...)`` with statically-foldable dims:
   ``b % 128 == 0`` (or ``b == 1``) and ``a % 8 == 0`` (or ``a == 1``);
 * the one-hot factor footprint at the engine's default ``d_ring``
-  (read from ``EngineConfig``) stays under the ~16 MiB VMEM budget.
+  (read from ``EngineConfig``) stays under the ~16 MiB VMEM budget --
+  both the ring-tiled delivery layout (``ENTRY_BLOCK`` x ``TILE_N``)
+  and the fused plastic step's resident-ring layout (``CHUNK`` x
+  ``RING_N_MAX``, the whole ring live across grid steps).
 """
 
 from __future__ import annotations
@@ -130,21 +133,47 @@ class PallasGeometryChecker(Checker):
     # ---- one-hot factor VMEM footprint --------------------------------
     def _vmem_budget(self, mod: Module, env: Dict[str, int],
                      d_ring: int) -> Iterable[Finding]:
-        eb, tile_n = env.get("ENTRY_BLOCK"), env.get("TILE_N")
         lanes = env.get("LANES", _LANE)
-        if eb is None or tile_n is None or not lanes:
+        if not lanes:
             return
         f32 = 4
-        row_onehot = eb * (d_ring * tile_n // lanes) * f32
-        lane_onehot = eb * lanes * f32
-        ring_tiles = 2 * d_ring * tile_n * f32
-        entry_blocks = 3 * eb * f32
-        total = row_onehot + lane_onehot + ring_tiles + entry_blocks
-        if total > VMEM_BUDGET_BYTES:
-            yield Finding(
-                mod.path, 1, self.name,
-                f"one-hot MXU factors at ENTRY_BLOCK={eb}, "
-                f"TILE_N={tile_n}, d_ring={d_ring} need "
-                f"~{total / 2**20:.1f} MiB of VMEM "
-                f"(budget {VMEM_BUDGET_BYTES / 2**20:.0f} MiB): shrink "
-                "ENTRY_BLOCK or TILE_N")
+        eb, tile_n = env.get("ENTRY_BLOCK"), env.get("TILE_N")
+        if eb is not None and tile_n is not None:
+            # ring-tiled delivery kernel: the block streams ENTRY_BLOCK
+            # entries against a (d_ring, TILE_N) ring tile
+            row_onehot = eb * (d_ring * tile_n // lanes) * f32
+            lane_onehot = eb * lanes * f32
+            ring_tiles = 2 * d_ring * tile_n * f32
+            entry_blocks = 3 * eb * f32
+            total = row_onehot + lane_onehot + ring_tiles + entry_blocks
+            if total > VMEM_BUDGET_BYTES:
+                yield Finding(
+                    mod.path, 1, self.name,
+                    f"one-hot MXU factors at ENTRY_BLOCK={eb}, "
+                    f"TILE_N={tile_n}, d_ring={d_ring} need "
+                    f"~{total / 2**20:.1f} MiB of VMEM "
+                    f"(budget {VMEM_BUDGET_BYTES / 2**20:.0f} MiB): "
+                    "shrink ENTRY_BLOCK or TILE_N")
+        rnm, chunk = env.get("RING_N_MAX"), env.get("CHUNK")
+        if rnm is not None and chunk is not None:
+            # resident-ring fused plastic kernel: the whole
+            # (d_ring, RING_N_MAX) ring (in + accumulator) stays in
+            # VMEM across grid steps, and each liveness-gated CHUNK
+            # contracts a (CHUNK, d_ring * RING_N_MAX / LANES) one-hot
+            # row factor against the lane-packed weights; 5 entry
+            # streams (tgt/w/d/mask in, depressed w out) ride along
+            row_onehot = chunk * (d_ring * rnm // lanes) * f32
+            lane_onehot = chunk * lanes * f32
+            rings = 2 * d_ring * rnm * f32
+            xpost = rnm * f32
+            streams = 5 * (eb or chunk) * f32
+            total = row_onehot + lane_onehot + rings + xpost + streams
+            if total > VMEM_BUDGET_BYTES:
+                yield Finding(
+                    mod.path, 1, self.name,
+                    f"resident-ring plastic kernel at CHUNK={chunk}, "
+                    f"RING_N_MAX={rnm}, d_ring={d_ring} needs "
+                    f"~{total / 2**20:.1f} MiB of VMEM "
+                    f"(budget {VMEM_BUDGET_BYTES / 2**20:.0f} MiB): "
+                    "shrink RING_N_MAX (larger shards take the "
+                    "two-pass fallback) or CHUNK")

@@ -15,8 +15,11 @@ Fault-tolerance properties:
   * **elastic**: restore takes ``shardings`` for the *new* mesh -- leaves
     are loaded on host and ``jax.device_put`` resharded, so a job can
     come back on a different pod count / tiling than it crashed on;
-  * **async**: ``AsyncCheckpointer`` snapshots to host then writes on a
-    daemon thread, keeping the train loop off the blocking path.
+  * **async**: ``AsyncCheckpointer.save`` takes a *device-side* snapshot
+    (an async buffer copy) and returns; the device->host transfer and
+    the file writes both happen on a daemon thread, so the blocking D2H
+    overlaps the caller's next segment of compute (double-buffered
+    segment handoff) instead of serializing with it.
 """
 
 from __future__ import annotations
@@ -30,6 +33,7 @@ import threading
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -232,8 +236,11 @@ class AsyncWriterThread:
 
 
 class AsyncCheckpointer(AsyncWriterThread):
-    """Daemon-thread writer; ``save`` returns once the host snapshot is
-    taken.  ``wait()`` drains pending writes (call before exit)."""
+    """Daemon-thread writer; ``save`` returns once the *device-side*
+    snapshot is dispatched -- the device->host transfer runs in
+    ``_write`` on the worker thread, overlapped with whatever the
+    caller computes next.  ``wait()`` drains pending writes (call
+    before exit)."""
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
@@ -241,11 +248,17 @@ class AsyncCheckpointer(AsyncWriterThread):
         super().__init__()
 
     def _write(self, item):
+        # save_checkpoint device_gets each leaf here, on the worker:
+        # the D2H transfer happens concurrently with the caller's next
+        # segment instead of blocking save()
         step, tree, meta = item
         save_checkpoint(self.directory, step, tree, self.keep, meta=meta)
 
     def save(self, step: int, tree, meta: Optional[dict] = None):
         self._assert_owner("save")
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
-                                 tree)
-        self._submit((step, host_tree, meta))
+        # Buffer copy, not host transfer: the caller's very next step
+        # typically *donates* the live state to the jitted segment, so
+        # the snapshot must not alias it -- but it can stay on device
+        # until the worker drains it (double-buffered handoff).
+        snap = jax.tree.map(jnp.copy, tree)
+        self._submit((step, snap, meta))

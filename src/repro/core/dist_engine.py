@@ -32,7 +32,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .engine import (EngineConfig, deliver_event_tiers, external_drive,
-                     init_sim_state)
+                     init_sim_state, plastic_delivery_stdp)
 from .halo import exchange_halo_2d, pack_bits, unpack_bits
 from .neuron import lif_sfa_step
 from .synapses import (SynapseTables, TableStorage, build_tables,
@@ -153,10 +153,13 @@ def abstract_dist_inputs(cfg: DistConfig,
     When the engine is plastic (``cfg.engine.stdp`` set) the state grows
     a ``plastic`` subtree -- per-tier synaptic weights plus the STDP
     pre/post traces -- because plastic weights are *dynamics*, carried
-    through the scan and checkpointed with the neuron state (the static
-    ``tables`` argument then only supplies the realization's structure:
-    targets, delays, occupancy and the build-time weights that define
-    the plastic mask).
+    through the scan and checkpointed with the neuron state.  The carry
+    is then the *single* live float copy of the weights: the static
+    ``tables`` argument only supplies the realization's structure
+    (targets, delays, occupancy) and its ``w`` leaves fold down to the
+    int8 plastic mask (``fold_plastic_tables``).  Pre-traces are
+    local-tier only -- halo replicas arrive per step through the halo
+    exchange, never stored.
     """
     ty, tx = cfg.tiles
     e = cfg.engine
@@ -180,13 +183,15 @@ def abstract_dist_inputs(cfg: DistConfig,
     }
     abst = spec.abstract_tables(storage)
     if e.stdp is not None:
+        # carry abstracts read the *full-width* weight dtype before the
+        # tables fold to masks below -- the carry is the live copy
         tiers = abst.tiers()
         state["plastic"] = {
             "w": [sd(t["w"].shape, t["w"].dtype) for t in tiers],
-            "x_pre": [sd((t["tgt"].shape[0],), jnp.float32)
-                      for t in tiers],
+            "x_pre": [sd((tiers[0]["tgt"].shape[0],), jnp.float32)],
             "x_post": sd((n_local,), jnp.float32),
         }
+        abst = fold_plastic_tables(abst)
 
     def lift(t):
         return {k: jax.ShapeDtypeStruct((ty, tx) + v.shape, v.dtype)
@@ -200,16 +205,49 @@ def abstract_dist_inputs(cfg: DistConfig,
 def init_dist_plastic_state(cfg: DistConfig, tables: dict) -> dict:
     """Fresh plastic carry: weights copied from the stacked build tables
     (copies, never views -- the sim donates its state argument, and the
-    static tables must survive every segment), traces at zero."""
+    static tables must survive every segment), traces at zero.
+
+    ``tables`` must carry the *build weights* (float), not the folded
+    int8 masks the device tables hold (``fold_plastic_tables``) -- the
+    carry initialized here becomes the run's single live weight copy.
+    The pre-trace is local-tier only: halo replicas are exchanged per
+    step, never carried."""
     ty, tx = cfg.tiles
     n_local = cfg.engine.spec().n_local
     tiers = [tables["local"]] + list(tables["halo"])
+    if any(np.dtype(t["w"].dtype) == np.int8 for t in tiers):
+        raise ValueError(
+            "init_dist_plastic_state needs the build-weight tables "
+            "(float w); got int8-folded mask tables -- pass the host "
+            "copy taken before fold_plastic_tables")
+    from .stdp import check_weight_invariant
+    check_weight_invariant(tiers, cfg.engine.stdp)
     return {
         "w": [jnp.asarray(np.asarray(t["w"])) for t in tiers],
-        "x_pre": [jnp.zeros(t["tgt"].shape[:-1], jnp.float32)
-                  for t in tiers],
+        "x_pre": [jnp.zeros(tiers[0]["tgt"].shape[:-1], jnp.float32)],
         "x_post": jnp.zeros((ty, tx, n_local), jnp.float32),
     }
+
+
+def fold_plastic_tables(tables: SynapseTables) -> SynapseTables:
+    """Fold the static tables' weight leaves down to the int8 plastic
+    mask (``w > 0``: excitatory-at-build = plastic, DPSNN's convention).
+
+    Plastic runs read live weights exclusively from the scan carry
+    (``init_dist_plastic_state``), so keeping the build weights resident
+    on device would duplicate every weight tier at full width; after the
+    fold the device tables cost 1 B/synapse for the mask instead of
+    ``weight_dtype`` bytes.  Accepts abstract (ShapeDtypeStruct) or
+    materialized tables; host-side for the latter."""
+
+    def fold(t):
+        w = t["w"]
+        if isinstance(w, jax.ShapeDtypeStruct):
+            return dict(t, w=jax.ShapeDtypeStruct(w.shape, jnp.int8))
+        return dict(t, w=jnp.asarray((np.asarray(w) > 0).astype(np.int8)))
+
+    return tables.replace(local=fold(tables.local),
+                          halo=[fold(t) for t in tables.halo])
 
 
 def build_dist_inverse_index(cfg: DistConfig, tables: dict):
@@ -313,14 +351,18 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
     and pre/post trace arrays join the scan carry as
     ``state["plastic"]`` (see ``abstract_dist_inputs``) and
     ``inputs.inv_slots`` must carry the stacked per-shard target-major
-    inverse index from ``build_dist_inverse_index``.  Delivery then
-    reads weights from the carry (``inputs.tables`` supplies structure
-    and the build-time weights that fix the plastic mask), and every
-    step ends with a halo-aware ``stdp_step`` over all tiers:
-    cross-tile synapses depress from the halo spike vectors the
-    delivery consumed and potentiate through the inverse index, with
-    per-band halo pre-traces that track each remote source exactly
-    like its home shard does.
+    inverse index from ``build_dist_inverse_index``.  The carry is the
+    single live weight copy -- ``inputs.tables`` supplies structure
+    plus the int8 plastic mask (``fold_plastic_tables``) -- and each
+    step routes through ``engine.plastic_delivery_stdp``: one fused
+    Pallas launch applying delivery + LTD in the same pass over the
+    entry stream when kernels are on (two-pass reference otherwise),
+    then the shared LTP/clamp/trace finalize.  Cross-tile synapses
+    depress from the halo spike vectors delivery consumed and
+    potentiate through the inverse index; the per-band halo
+    *pre-traces* they need arrive through the same halo exchange as
+    the spikes (the owner's local trace, bit-identical to a
+    locally-maintained replica), so only the local trace is carried.
     """
     e = cfg.engine
     spec = e.spec()
@@ -374,13 +416,42 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
             tabs = {"local": dict(tables["local"], w=pl["w"][0]),
                     "halo": [dict(t, w=w) for t, w in
                              zip(tables["halo"], pl["w"][1:])]}
+            # halo pre-trace replicas ride the same halo path as the
+            # spikes: each band row's trace is the owner's local x_pre
+            # carry at the start of this step -- bit-identical to the
+            # replica a shard would maintain itself (same decay/increment
+            # recurrence in the same order), so the carry only holds the
+            # local tier.  Sent pre-decay; stdp decays uniformly in-step.
+            xpre0 = pl["x_pre"][0]
+            x_pre_tiers = [xpre0]
+            if band_idx:
+                xpre_blk = xpre0[:n_local].reshape(
+                    d.tile_h, d.tile_w, n_per_col)[..., :n_exc]
+                xpre_region = exchange_halo_2d(
+                    xpre_blk, radius=radius, axis_y=cfg.axis_y,
+                    axis_x=cfg.axis_x, mode=cfg.halo_mode).reshape(-1)
+                sink = jnp.zeros((1,), jnp.float32)
+                x_pre_tiers += [
+                    jnp.concatenate([xpre_region[idx], sink])
+                    for idx in band_idx]
+            traces_in = {"x_pre": x_pre_tiers, "x_post": pl["x_post"]}
+            tiers = [tabs["local"]] + list(tabs["halo"])
         else:
             tabs = tables
         m = state["metrics"]
+        new_plastic = None
         if e.mode == "event":
-            i_ring, ev, dr = deliver_event_tiers(
-                tabs, spikes, halo_spikes, spec, i_ring, slot,
-                e.d_ring, e.kernels_enabled, plan=plan)
+            if plastic:
+                i_ring, new_tiers, traces, ev, dr = plastic_delivery_stdp(
+                    tiers, masks, inv, traces_in, [spikes] + halo_spikes,
+                    spec, i_ring, slot, e, plan)
+                new_plastic = {"w": [t["w"] for t in new_tiers],
+                               "x_pre": traces["x_pre"][:1],
+                               "x_post": traces["x_post"]}
+            else:
+                i_ring, ev, dr = deliver_event_tiers(
+                    tabs, spikes, halo_spikes, spec, i_ring, slot,
+                    e.d_ring, e.kernels_enabled, plan=plan)
         else:
             i_ring = deliver_gather_all(tabs["local"], spikes, i_ring,
                                         slot, e.d_ring)
@@ -390,6 +461,14 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
             for tab, spk in zip(tabs["halo"], halo_spikes):
                 i_ring = deliver_gather_all(tab, spk, i_ring, slot, e.d_ring)
                 ev += jnp.sum(tab["nnz"][:-1].astype(jnp.float32) * spk)
+            if plastic:
+                from .stdp import stdp_step
+                new_tiers, traces = stdp_step(
+                    tiers, masks, inv, traces_in, [spikes] + halo_spikes,
+                    spikes, e.stdp, pre_caps, spec.active_cap_local)
+                new_plastic = {"w": [t["w"] for t in new_tiers],
+                               "x_pre": traces["x_pre"][:1],
+                               "x_post": traces["x_post"]}
 
         new_state = {
             "neuron": neuron, "i_ring": i_ring, "t": state["t"] + 1,
@@ -398,17 +477,8 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
                         "events": m["events"] + ev,
                         "dropped": m["dropped"] + dr},
         }
-        if plastic:
-            from .stdp import stdp_step
-            tiers = [tabs["local"]] + list(tabs["halo"])
-            new_tiers, traces = stdp_step(
-                tiers, masks, inv,
-                {"x_pre": pl["x_pre"], "x_post": pl["x_post"]},
-                [spikes] + halo_spikes, spikes, e.stdp,
-                pre_caps, spec.active_cap_local)
-            new_state["plastic"] = {"w": [t["w"] for t in new_tiers],
-                                    "x_pre": traces["x_pre"],
-                                    "x_post": traces["x_post"]}
+        if new_plastic is not None:
+            new_state["plastic"] = new_plastic
         return new_state, spikes
 
     abs_state, abs_tables = abstract_dist_inputs(cfg, storage)

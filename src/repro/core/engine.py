@@ -174,18 +174,76 @@ def deliver_event_tiers(tables, spikes, halo_band_spikes, spec, i_ring,
     return i_ring, ev, dr
 
 
+def plastic_delivery_stdp(tiers, masks, inv, traces, spike_tiers, spec,
+                          i_ring, slot, cfg: EngineConfig, plan):
+    """One plastic update: event delivery + STDP over ``tiers``.
+
+    The single source of truth for both plastic step bodies
+    (``_run_plastic`` and the distributed ``shard_step``).  Routing:
+
+      * kernels enabled and the shard fits the resident-ring kernel
+        (``kernels.plastic_step.fused_supported``): ONE Pallas launch
+        applies delivery and the LTD weight update in the same pass
+        over the lane-packed entry stream, then the shared XLA
+        ``stdp_ltp_finalize`` adds LTP / clamp / trace increments;
+      * otherwise: the two-pass reference -- ``deliver_event_tiers``
+        (which itself routes kernel vs XLA delivery) followed by the
+        full ``stdp_step``.
+
+    Both routes are bit-identical (kernel contract, tested at tier-1
+    sizes).  ``tiers`` carry the *live* weights (the scan carry is the
+    single weight source); ``traces`` is ``{"x_pre": [per tier],
+    "x_post"}``.  Returns (i_ring, new_tiers, new_traces, events,
+    dropped) with events/dropped as f32 scalars.
+    """
+    from .stdp import stdp_ltp_finalize, stdp_step
+    p = cfg.stdp
+    spikes_local = spike_tiers[0]
+    post_cap = spec.active_cap_local
+    if cfg.kernels_enabled:
+        from ..kernels import ops as kops
+        from ..kernels.plastic_step import fused_supported
+        if fused_supported(spec.n_local):
+            # decay first (updates read *previous* activity), exactly as
+            # stdp_step does; the kernel consumes the decayed post trace
+            x_pre_d = [xp * p.decay_plus for xp in traces["x_pre"]]
+            x_post_d = traces["x_post"] * p.decay_minus
+            tier_args = [(t, spk, tp.active_cap)
+                         for t, spk, tp in zip(tiers, spike_tiers, plan)]
+            i_ring, new_w, ev, dr = kops.plastic_step_banded(
+                tier_args, masks, x_post_d, i_ring, slot, cfg.d_ring,
+                -p.a_minus, plan=plan)
+            new_tiers = [dict(t, w=w) for t, w in zip(tiers, new_w)]
+            new_tiers, new_traces = stdp_ltp_finalize(
+                new_tiers, masks, inv, x_pre_d, x_post_d, spike_tiers,
+                spikes_local, p, post_cap)
+            return (i_ring, new_tiers, new_traces,
+                    ev.astype(jnp.float32), dr.astype(jnp.float32))
+    tabs = {"local": tiers[0], "halo": list(tiers[1:])}
+    i_ring, ev, dr = deliver_event_tiers(
+        tabs, spikes_local, list(spike_tiers[1:]), spec, i_ring, slot,
+        cfg.d_ring, cfg.kernels_enabled, plan=plan)
+    new_tiers, new_traces = stdp_step(
+        tiers, masks, inv, traces, spike_tiers, spikes_local, p,
+        [tp.active_cap for tp in plan], post_cap)
+    return i_ring, new_tiers, new_traces, ev, dr
+
+
 def step(state: dict, tables: dict, cfg: EngineConfig,
-         halo_band_spikes: Optional[list] = None):
+         halo_band_spikes: Optional[list] = None, deliver: bool = True):
     """One simulation step.
 
     ``halo_band_spikes``: list of per-band (rows_b,) spike vectors for the
     halo excitatory sources this step (None when running single-shard).
+    ``deliver=False`` stops after the LIF update and ring-slot consume --
+    the plastic scan body uses it so delivery can run fused with the
+    STDP update (``plastic_delivery_stdp``) instead of here.
     Returns (new_state, local_spikes).
     """
     spec = cfg.spec()
     n_local = spec.n_local
     plan = (spec.delivery_plan(getattr(tables, "storage", None))
-            if cfg.mode == "event" else None)
+            if cfg.mode == "event" and deliver else None)
     key, k_ext = jax.random.split(state["rng"])
     slot = state["t"] % cfg.d_ring
 
@@ -202,7 +260,9 @@ def step(state: dict, tables: dict, cfg: EngineConfig,
 
     halo_band_spikes = halo_band_spikes or []
     metrics = state["metrics"]
-    if cfg.mode == "event":
+    if not deliver:
+        metrics = dict(metrics, spikes=metrics["spikes"] + jnp.sum(spikes))
+    elif cfg.mode == "event":
         i_ring, ev, dr = deliver_event_tiers(
             tables, spikes, halo_band_spikes, spec, i_ring, slot,
             cfg.d_ring, cfg.kernels_enabled, plan=plan)
@@ -309,21 +369,34 @@ def _run_plastic(state: dict, tables, stdp_aux: dict,
     multi-tile config's tables) are ignored, exactly like delivery
     ignores them without halo spikes.  The distributed plastic path is
     ``dist_engine.make_sim_fn`` with ``EngineConfig.stdp`` set.
-    """
-    from .stdp import stdp_step
 
+    Delivery and STDP run through ``plastic_delivery_stdp`` -- one
+    fused Pallas launch when kernels are enabled, the two-pass
+    reference otherwise.
+    """
+    if cfg.mode != "event":
+        raise ValueError(
+            f"plastic runs require mode='event' (got {cfg.mode!r}): the "
+            "STDP update is event-driven on the same compaction as "
+            "delivery")
     spec = cfg.spec()
+    plan = spec.delivery_plan(getattr(tables, "storage", None))[:1]
     masks = stdp_aux["masks"][:1]
     traces_init = {"x_pre": stdp_aux["traces"]["x_pre"][:1],
                    "x_post": stdp_aux["traces"]["x_post"]}
 
     def body(carry, _):
         st, tabs, traces = carry
-        new_state, spikes = step(st, tabs, cfg, halo_band_spikes=None)
-        tiers, traces = stdp_step(
-            [tabs["local"]], masks, stdp_aux["inv"], traces,
-            [spikes], spikes, cfg.stdp,
-            [spec.active_cap_local], spec.active_cap_local)
+        slot = st["t"] % cfg.d_ring
+        new_state, spikes = step(st, tabs, cfg, halo_band_spikes=None,
+                                 deliver=False)
+        i_ring, tiers, traces, ev, dr = plastic_delivery_stdp(
+            [tabs["local"]], masks, stdp_aux["inv"], traces, [spikes],
+            spec, new_state["i_ring"], slot, cfg, plan)
+        m = new_state["metrics"]
+        new_state = dict(new_state, i_ring=i_ring,
+                         metrics=dict(m, events=m["events"] + ev,
+                                      dropped=m["dropped"] + dr))
         tabs = with_local_tier(tabs, tiers[0])
         return (new_state, tabs, traces), jnp.sum(spikes)
 
@@ -341,10 +414,12 @@ def init_plasticity(tables: dict, cfg: EngineConfig) -> dict:
     distributed engine builds the same structures per shard via
     ``dist_engine.build_dist_inverse_index``.
     """
-    from .stdp import build_inverse_index, init_stdp_state, plastic_masks
+    from .stdp import (build_inverse_index, check_weight_invariant,
+                       init_stdp_state, plastic_masks)
 
     tiers = [tables["local"]] + list(tables.get("halo", []))
     n_local = cfg.spec().n_local
+    check_weight_invariant(tiers, cfg.stdp)
     return {
         "inv": build_inverse_index(tiers, n_local),
         "masks": plastic_masks(tiers),

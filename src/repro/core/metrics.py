@@ -61,13 +61,17 @@ def shard_memory_bytes(spec: SynapseTableSpec, storage=None,
     ``storage`` (a ``TableStorage``) sizes the synapse tables -- pass a
     materialized (compressed) descriptor to account realized caps and
     narrow dtypes; ``None`` uses the spec's analytic storage.  With
-    ``plastic=True`` the STDP carry is added: the weight tier copy that
-    rides in the scan state, the per-source-row pre-traces, per-target
-    post-traces, and the inverse (target -> synapse slot) index
-    (``cap_pad=1.3`` over the mean in-degree, as built by
-    ``core.stdp.build_inverse_index``).  ``recorder_capacity`` adds the
-    spike observatory's per-segment event buffer (step + gid per slot,
-    plus count/dropped scalars)."""
+    ``plastic=True`` the STDP carry is added: the live weight tiers in
+    the scan state, the local-tier pre-trace (halo replicas are
+    exchanged per step, never stored), per-target post-traces, and the
+    inverse (target -> synapse slot) index (``cap_pad=1.3`` over the
+    mean in-degree, as built by ``core.stdp.build_inverse_index``).
+    The static tables' weight leaves are then folded down to the int8
+    plastic mask (``dist_engine.fold_plastic_tables``): the carry is
+    the single full-width weight copy, and the ``tables`` term shrinks
+    accordingly.  ``recorder_capacity`` adds the spike observatory's
+    per-segment event buffer (step + gid per slot, plus count/dropped
+    scalars)."""
     from .synapses import np_dtype
     n_local = spec.n_local
     if storage is None:
@@ -80,14 +84,15 @@ def shard_memory_bytes(spec: SynapseTableSpec, storage=None,
            "active_mask": active}
     if plastic:
         w_item = np_dtype(storage.weight_dtype).itemsize
-        rows = sum(p.rows + 1 for p in spec.delivery_plan(storage))
+        plan = spec.delivery_plan(storage)
         caps = storage.caps()
-        w_carry = sum((p.rows + 1) * c * w_item
-                      for p, c in zip(spec.delivery_plan(storage), caps))
+        w_slots = sum((p.rows + 1) * c for p, c in zip(plan, caps))
+        # fold-away: static w leaves hold the 1-byte mask, not weights
+        out["tables"] = table - w_slots * (w_item - 1)
         mean_in = spec.expected_synapses() / max(n_local, 1)
         inv_cap = int(np.ceil(1.3 * mean_in))
-        out["plastic"] = (w_carry              # weight tiers in the carry
-                          + rows * 4           # pre-traces (one per row)
+        out["plastic"] = (w_slots * w_item     # live weight tiers (carry)
+                          + (n_local + 1) * 4  # local pre-trace
                           + n_local * 4        # post-traces
                           + n_local * inv_cap * 4)  # inverse index slots
     if recorder_capacity:

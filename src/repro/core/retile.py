@@ -410,8 +410,10 @@ def retile_plastic(plastic: dict, old_tables,
         storage)
     w_new = [new_tabs["local"]["w"]] + [t["w"] for t in new_tabs["halo"]]
 
-    # pre-traces: per pre-neuron values; the home (local-tier) copy is
-    # authoritative and halo copies are exact replicas of it
+    # pre-traces: per pre-neuron values, carried for the local tier only
+    # (band replicas are exchanged per step, never stored -- see
+    # ``dist_engine.make_sim_fn``); relaid like the membrane state, by
+    # global neuron id
     n_per = old_d.grid.n_per_column
     trace = np.zeros((old_d.grid.n_neurons,), np.float32)
     xp_local = np.asarray(plastic["x_pre"][0])
@@ -420,9 +422,6 @@ def retile_plastic(plastic: dict, old_tables,
             lmap = local_gid_map(old_d, ty, tx)
             live = lmap >= 0
             trace[lmap[live]] = xp_local[ty, tx, :len(lmap)][live]
-
-    bands2 = new_spec.halo_bands()
-    n_exc = new_spec.n_exc_per_col
 
     def lift_traces(gid_map_fn, rows):
         out = np.zeros((new_d.tiles_y, new_d.tiles_x, rows + 1),
@@ -436,11 +435,6 @@ def retile_plastic(plastic: dict, old_tables,
 
     x_pre = [lift_traces(lambda y, x: local_gid_map(new_d, y, x),
                          new_spec.n_local)]
-    for b in bands2:
-        x_pre.append(lift_traces(
-            lambda y, x, cols=b["cols"]: band_gid_map(new_d, cols, y, x,
-                                                      n_exc),
-            b["rows"]))
 
     # post-trace: a per-local-neuron quantity, same permutation as v
     src = neuron_gather_map(old_d, new_d)

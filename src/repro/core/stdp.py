@@ -117,8 +117,33 @@ def init_stdp_state(tiers: Sequence[dict], n_local: int) -> dict:
 
 
 def plastic_masks(tiers: Sequence[dict]) -> list:
-    """Excitatory (w>0 at build time) synapses are plastic."""
-    return [(t["w"] > 0).astype(t["w"].dtype) for t in tiers]
+    """Excitatory (w>0 at build time) synapses are plastic.
+
+    Accepts either full-weight tiers or the int8-folded mask tables of
+    the distributed engine (``dist_engine.fold_plastic_tables``) -- the
+    mask is returned as float32 either way, the dtype every STDP
+    product reads it at."""
+    return [(t["w"] > 0).astype(jnp.float32) for t in tiers]
+
+
+def check_weight_invariant(tiers: Sequence[dict], params: STDPParams):
+    """Refuse build weights above ``w_max`` at plasticity init.
+
+    The one-launch kernel path scatters the in-kernel LTD result
+    straight back (``kernels.plastic_step``); its bitwise equivalence
+    to the reference ``stdp_step`` relies on the full-tier
+    ``clip(None, w_max)`` being a no-op, i.e. every weight starting
+    (and inductively staying) <= w_max.  Default parameters satisfy it
+    with wide margin (j_exc ~ 0.44 mV at the jitter ceiling vs
+    w_max = 1.0); a config that violates it must raise here, not
+    silently diverge between the two paths.
+    """
+    hi = max(float(jnp.max(t["w"].astype(jnp.float32))) for t in tiers)
+    if hi > params.w_max:
+        raise ValueError(
+            f"build weight {hi} exceeds STDP w_max={params.w_max}; the "
+            "plastic step requires w <= w_max at init (raise w_max or "
+            "lower j_exc_mv)")
 
 
 def stdp_step(tiers: Sequence[dict], masks: Sequence[jnp.ndarray],
@@ -131,7 +156,9 @@ def stdp_step(tiers: Sequence[dict], masks: Sequence[jnp.ndarray],
 
     ``spike_tiers[i]`` is the (rows_i,) pre-spike vector of tier i (the
     same vectors delivery used); ``spikes_local`` the (n_local,) post
-    spikes of this step.
+    spikes of this step.  Composed of the LTD phase below plus
+    ``stdp_ltp_finalize`` -- the fused-kernel path replaces only the
+    former (in-launch with delivery) and shares the latter verbatim.
     """
     p = params
     new_tiers = [dict(t) for t in tiers]
@@ -151,6 +178,27 @@ def stdp_step(tiers: Sequence[dict], masks: Sequence[jnp.ndarray],
         w = new_tiers[i]["w"].at[rows].add(dw.astype(t["w"].dtype))
         new_tiers[i]["w"] = jnp.clip(
             jnp.where(mask > 0, w, new_tiers[i]["w"]), None, p.w_max)
+
+    return stdp_ltp_finalize(new_tiers, masks, inv, x_pre, x_post,
+                             spike_tiers, spikes_local, params, post_cap)
+
+
+def stdp_ltp_finalize(tiers: Sequence[dict], masks: Sequence[jnp.ndarray],
+                      inv: dict, x_pre: Sequence[jnp.ndarray],
+                      x_post: jnp.ndarray,
+                      spike_tiers: Sequence[jnp.ndarray],
+                      spikes_local: jnp.ndarray,
+                      params: STDPParams, post_cap: int):
+    """LTP + final clamp + trace increments on post-LTD tiers.
+
+    ``x_pre`` / ``x_post`` are the *decayed* traces (pre-increment: the
+    values this step's updates read).  Shared verbatim between the
+    two-pass reference (``stdp_step``) and the one-launch kernel path,
+    which applies LTD inside the delivery launch and hands the
+    depressed tiers here.
+    """
+    p = params
+    new_tiers = [dict(t) for t in tiers]
 
     # ---- LTP: post spike => potentiate incoming by pre trace -----------
     n_local = spikes_local.shape[0]

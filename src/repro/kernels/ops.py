@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention as _flash
 from .lif_step import lif_step_pallas
+from .plastic_step import plastic_delivery_ltd as _plastic_ltd
 from .spike_compact import spike_compact_pallas
 from .synaptic_accum import (event_delivery, event_delivery_banded as
                              _delivery_banded)
@@ -70,6 +71,21 @@ def synaptic_accum_banded(tiers, i_ring, t_slot, d_ring: int, plan=None):
     n_dropped) summed over tiers."""
     return _delivery_banded(tiers, i_ring, t_slot, d_ring, plan=plan,
                             interpret=_interpret())
+
+
+def plastic_step_banded(tiers, masks, x_post_decayed, i_ring, t_slot,
+                        d_ring: int, neg_a_minus: float, plan=None):
+    """One-launch plastic step: multi-tier delivery + in-kernel LTD.
+
+    Same entry stream and reduction grouping as
+    ``synaptic_accum_banded`` plus a per-entry weight update
+    (``w += (-a_minus) * x_post[tgt] * mask``) written back in the same
+    launch.  ``x_post_decayed`` must be the post trace *after* this
+    step's decay, *before* its spike increment.  Returns
+    (ring, new_w_tiers, n_events, n_dropped)."""
+    return _plastic_ltd(tiers, masks, x_post_decayed, i_ring, t_slot,
+                        d_ring, neg_a_minus, plan=plan,
+                        interpret=_interpret())
 
 
 def spike_compact(spikes, n_rows: int, active_cap: int):

@@ -113,8 +113,10 @@ class FaultTolerantLoop:
         raise NotImplementedError
 
     def _save(self, step: int, state):
-        # AsyncCheckpointer.save snapshots to host synchronously, so the
-        # next (donating) step call cannot invalidate what gets written.
+        # AsyncCheckpointer.save snapshots the state with a device-side
+        # buffer copy before returning, so the next (donating) step call
+        # cannot invalidate what gets written; the device->host transfer
+        # itself overlaps that next step on the writer thread.
         self.ckpt.save(step, state)
 
     def _on_rewind(self, step: int):

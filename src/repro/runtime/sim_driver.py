@@ -71,8 +71,9 @@ from ..checkpoint.store import (checkpoint_meta, latest_step,
                                 refuse_meta_drift, restore_checkpoint)
 from ..core.dist_engine import (DistConfig, SimInputs, abstract_dist_inputs,
                                 build_dist_inverse_index, build_dist_tables,
-                                dist_shardings, init_dist_plastic_state,
-                                init_dist_state, make_sim_fn)
+                                dist_shardings, fold_plastic_tables,
+                                init_dist_plastic_state, init_dist_state,
+                                make_sim_fn)
 from ..core.retile import (gather_synapse_stream, retile_config,
                            retile_plastic, retile_state, retile_tables)
 from ..core.synapses import TableStorage, compress_tables
@@ -171,6 +172,10 @@ class SimDriver(FaultTolerantLoop):
                                                   self.storage)
         self._tables_host = (jax.tree.map(np.asarray, tables)
                              if self.plastic else None)
+        if self.plastic:
+            # the plastic carry is the single live weight copy; the
+            # resident tables keep only the int8 plastic mask
+            tables = fold_plastic_tables(tables)
         self.tables = jax.device_put(tables, table_sh)
         self._inv_slots = None
         if self.plastic:
@@ -263,8 +268,10 @@ class SimDriver(FaultTolerantLoop):
                 self.spool.truncate({})
             state = init_dist_state(self.dist_cfg)
             if self.plastic:
-                state["plastic"] = init_dist_plastic_state(self.dist_cfg,
-                                                           self.tables)
+                # from the host build tables: the device tables carry
+                # only the folded int8 mask, not the build weights
+                state["plastic"] = init_dist_plastic_state(
+                    self.dist_cfg, self._tables_host)
             return 0, jax.device_put(state, self._state_sh)
         d = self.dist_cfg.engine.decomp
         meta = checkpoint_meta(self.cfg.ckpt_dir, last)

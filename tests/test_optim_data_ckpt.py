@@ -170,3 +170,25 @@ def test_async_checkpointer(tmp_path, rng):
         ck.save(s, tree)
     ck.close()
     assert latest_step(str(tmp_path)) == 20
+
+
+def test_async_checkpointer_snapshot_immutable(tmp_path, rng):
+    """The double-buffered handoff contract: ``save`` snapshots on
+    device and returns before the D2H transfer, so the caller is free
+    to *donate* the live tree to its next jitted segment immediately.
+    The written checkpoint must hold the values at save time, not
+    whatever the donated buffer was overwritten with."""
+    ck = AsyncCheckpointer(str(tmp_path), keep=3)
+    w0 = np.asarray(rng.normal(size=(64,)), np.float32)
+    tree = {"w": jnp.asarray(w0)}
+    ck.save(1, tree)
+    # donate the source buffer to a segment that clobbers it in place
+    clobber = jax.jit(lambda t: jax.tree.map(lambda x: x * 0 - 1.0, t),
+                      donate_argnums=0)
+    tree = clobber(tree)
+    jax.block_until_ready(tree["w"])
+    ck.close()
+    out = restore_checkpoint(str(tmp_path), 1,
+                             {"w": jnp.zeros((64,), jnp.float32)})
+    np.testing.assert_array_equal(np.asarray(out["w"]), w0)
+    np.testing.assert_array_equal(np.asarray(tree["w"]), -1.0)

@@ -1,0 +1,145 @@
+"""The one-launch plastic step (kernels/plastic_step.py).
+
+Contract under test: with kernels enabled and the shard inside the
+resident-ring envelope, ``plastic_delivery_stdp`` applies delivery AND
+the LTD weight update in a single Pallas launch -- and that launch is
+*bit-identical* to both fallbacks (the kernel-delivery + XLA
+``stdp_step`` two-pass, and the pure-XLA reference), on regular and
+ragged tile sizes, with and without spikes.  Routing is a pure perf
+decision, never a numerics one.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.kernels.ops as kops
+import repro.kernels.plastic_step as ps
+from repro.core.connectivity import exponential_law, gaussian_law
+from repro.core.engine import (EngineConfig, build_shard_tables,
+                               init_plasticity, init_sim_state,
+                               run_plastic)
+from repro.core.grid import ColumnGrid, TileDecomposition
+from repro.core.stdp import STDPParams
+
+
+def _cfg(law="gaussian", grid=4, n_per_col=10, seed=3, **kw):
+    law_ = gaussian_law() if law == "gaussian" else exponential_law()
+    dec = TileDecomposition(grid=ColumnGrid(grid, grid, n_per_col),
+                            tiles_y=1, tiles_x=1, radius=law_.radius)
+    return EngineConfig(decomp=dec, law=law_, seed=seed,
+                        stdp=STDPParams(), **kw)
+
+
+def _run(cfg, steps, tabs=None):
+    tabs = build_shard_tables(cfg) if tabs is None else tabs
+    aux = init_plasticity(tabs, cfg)
+    (st, tabs1, traces), per = jax.jit(
+        lambda s, t: run_plastic(s, t, aux, cfg, steps))(
+            init_sim_state(cfg), tabs)
+    return st, tabs1, traces, np.asarray(per)
+
+
+def _assert_same(a, b):
+    sa, ta, ra, pa = a
+    sb, tb, rb, pb = b
+    np.testing.assert_array_equal(pa, pb)
+    np.testing.assert_array_equal(np.asarray(ta["local"]["w"]),
+                                  np.asarray(tb["local"]["w"]))
+    for k in ("x_post",):
+        np.testing.assert_array_equal(np.asarray(ra[k]), np.asarray(rb[k]))
+    np.testing.assert_array_equal(np.asarray(ra["x_pre"][0]),
+                                  np.asarray(rb["x_pre"][0]))
+    for k in ("v", "c", "refrac"):
+        np.testing.assert_array_equal(np.asarray(sa["neuron"][k]),
+                                      np.asarray(sb["neuron"][k]))
+    np.testing.assert_array_equal(np.asarray(sa["i_ring"]),
+                                  np.asarray(sb["i_ring"]))
+    for k in ("events", "dropped", "spikes"):
+        np.testing.assert_array_equal(np.asarray(sa["metrics"][k]),
+                                      np.asarray(sb["metrics"][k]))
+
+
+@pytest.mark.parametrize("law", ["gaussian", "exponential"])
+def test_fused_bit_identical_to_twopass_and_xla(law, monkeypatch):
+    """Fused one-launch vs two-pass-with-kernel-delivery vs pure XLA:
+    all three produce bitwise the same weights, traces, neuron state
+    and metrics over a window where plasticity actually fires."""
+    steps = 48
+    cfg = _cfg(law)
+    assert cfg.kernels_enabled and ps.fused_supported(cfg.spec().n_local)
+    fused = _run(cfg, steps)
+    with monkeypatch.context() as m:
+        m.setattr(ps, "RING_N_MAX", 0)       # routes the two-pass path
+        twopass = _run(cfg, steps)
+    xla = _run(dataclasses.replace(cfg, use_kernels=False), steps)
+    assert fused[3].sum() > 0                # the run spiked
+    _assert_same(fused, twopass)
+    _assert_same(fused, xla)
+
+
+def test_fused_bit_identical_on_ragged_tiles():
+    """5x5x9: n_local = 225 is lane- and sublane-ragged (pads to
+    N_ALIGN inside the kernel, entry stream pads per tier) -- identity
+    must survive the padding."""
+    steps = 48
+    cfg = _cfg(grid=5, n_per_col=9)
+    assert cfg.spec().n_local % 128 != 0
+    fused = _run(cfg, steps)
+    xla = _run(dataclasses.replace(cfg, use_kernels=False), steps)
+    assert fused[3].sum() > 0
+    _assert_same(fused, xla)
+
+
+def test_zero_spike_window_is_identity():
+    """Before the first spike (~step 34 at this scale/seed) the plastic
+    step must be a bitwise no-op on the weights: no events, traces
+    stay zero, and the fused path agrees with XLA on all of it."""
+    steps = 10
+    cfg = _cfg()
+    tabs = build_shard_tables(cfg)
+    fused = _run(cfg, steps, tabs=tabs)
+    xla = _run(dataclasses.replace(cfg, use_kernels=False), steps,
+               tabs=tabs)
+    assert fused[3].sum() == 0
+    np.testing.assert_array_equal(np.asarray(fused[1]["local"]["w"]),
+                                  np.asarray(tabs["local"]["w"]))
+    assert float(np.abs(np.asarray(fused[2]["x_post"])).sum()) == 0.0
+    assert float(np.asarray(fused[0]["metrics"]["events"])) == 0.0
+    _assert_same(fused, xla)
+
+
+def test_ring_n_max_routes_to_fallback(monkeypatch):
+    """``fused_supported`` is the routing predicate: under the envelope
+    the fused kernel launches; past it (RING_N_MAX forced to 0) the
+    two-pass fallback runs and the fused kernel is never invoked."""
+    cfg = _cfg()
+    calls = {"fused": 0}
+    real = kops.plastic_step_banded
+
+    def spy(*a, **kw):
+        calls["fused"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(kops, "plastic_step_banded", spy)
+    _run(cfg, 2)
+    assert calls["fused"] > 0
+
+    calls["fused"] = 0
+    with monkeypatch.context() as m:
+        m.setattr(ps, "RING_N_MAX", 0)
+        assert not ps.fused_supported(cfg.spec().n_local)
+        _run(cfg, 2)
+    assert calls["fused"] == 0
+
+
+def test_fused_supported_envelope():
+    """The predicate mirrors the kernel's own resident-ring guard
+    (n_local padded to N_ALIGN vs RING_N_MAX)."""
+    assert ps.fused_supported(1)
+    assert ps.fused_supported(ps.RING_N_MAX)
+    assert not ps.fused_supported(ps.RING_N_MAX + 1)
+    # the committed A/B config sits inside the envelope
+    assert ps.fused_supported(8 * 8 * 60)

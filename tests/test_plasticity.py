@@ -21,9 +21,8 @@ from repro.core.engine import (EngineConfig, build_shard_tables,
                                init_plasticity, init_sim_state,
                                run_plastic)
 from repro.core.grid import ColumnGrid, TileDecomposition
-from repro.core.retile import (band_gid_map, gather_synapse_stream,
-                               local_gid_map, retile_plastic,
-                               retile_tables)
+from repro.core.retile import (gather_synapse_stream, local_gid_map,
+                               retile_plastic, retile_tables)
 from repro.core.stdp import STDPParams
 from repro.parallel.compat import make_mesh
 from repro.runtime import DriverConfig, SimDriver
@@ -235,9 +234,9 @@ def test_retile_tables_roundtrip_is_canonical():
 
 def test_retile_plastic_relays_weights_and_traces():
     """The plastic carry follows the realization: live weights by
-    global synapse id, pre-traces by pre neuron id (halo rows become
-    exact replicas of the home trace), post-traces like the membrane
-    state."""
+    global synapse id, pre-traces by pre neuron id (local tier only --
+    halo replicas are exchanged per step, never carried), post-traces
+    like the membrane state."""
     a, b = _dist(tiles=(1, 2)), _dist(tiles=(2, 1))
     ta, _ = build_dist_tables(a)
     da, speca = a.engine.decomp, a.engine.spec()
@@ -252,20 +251,13 @@ def test_retile_plastic_relays_weights_and_traces():
         w = np.asarray(t["w"]).copy()
         w += (w > 0) * rng.uniform(0.0, 0.1, size=w.shape).astype(w.dtype)
         w_live.append(w)
-    n_exc = speca.n_exc_per_col
-    bands_a = speca.halo_bands()
-    x_pre = [np.zeros((1, 2, t["tgt"].shape[2]), np.float32)
-             for t in tiers]
+    x_pre = [np.zeros((1, 2, tiers[0]["tgt"].shape[2]), np.float32)]
     x_post = np.zeros((1, 2, speca.n_local), np.float32)
     for ty in range(1):
         for tx in range(2):
             lmap = local_gid_map(da, ty, tx)
             x_pre[0][ty, tx, :len(lmap)] = np.maximum(lmap, 0) + 0.5
             x_post[ty, tx] = np.where(lmap >= 0, lmap + 0.25, 0.0)
-            for i, band in enumerate(bands_a):
-                g = band_gid_map(da, band["cols"], ty, tx, n_exc)
-                x_pre[1 + i][ty, tx, :len(g)] = np.where(
-                    g >= 0, g + 0.5, 0.0)
 
     out = retile_plastic({"w": w_live, "x_pre": x_pre, "x_post": x_post},
                          ta, da, speca, db, specb)
@@ -286,8 +278,9 @@ def test_retile_plastic_relays_weights_and_traces():
     live_b = gather_synapse_stream(relaid_tabs, db, specb)
     np.testing.assert_array_equal(_canon(live_a), _canon(live_b))
 
-    # traces: every new-tiling row carries its neuron's gid pattern
-    bands_b = specb.halo_bands()
+    # traces: every new-tiling row carries its neuron's gid pattern;
+    # the pre-trace list stays local-only across the relay
+    assert len(out["x_pre"]) == 1
     for ty in range(2):
         for tx in range(1):
             lmap = local_gid_map(db, ty, tx)
@@ -298,9 +291,3 @@ def test_retile_plastic_relays_weights_and_traces():
             np.testing.assert_array_equal(
                 np.asarray(out["x_post"][ty, tx]),
                 np.where(lmap >= 0, lmap + 0.25, 0.0).astype(np.float32))
-            for i, band in enumerate(bands_b):
-                g = band_gid_map(db, band["cols"], ty, tx,
-                                 specb.n_exc_per_col)
-                np.testing.assert_array_equal(
-                    np.asarray(out["x_pre"][1 + i][ty, tx, :len(g)]),
-                    np.where(g >= 0, g + 0.5, 0.0).astype(np.float32))

@@ -450,6 +450,31 @@ def test_pallas_geometry_flags_vmem_blowout():
     assert any("VMEM" in f.message for f in hits)
 
 
+RING_CLEAN = '''
+from jax.experimental import pallas as pl
+
+LANES = 128
+ENTRY_SUBLANES = 128
+ENTRY_BLOCK = ENTRY_SUBLANES * LANES
+CHUNK = 4096
+RING_N_MAX = 8192
+
+spec = pl.BlockSpec((ENTRY_SUBLANES, LANES), lambda i: (i, 0))
+'''
+
+
+def test_pallas_geometry_resident_ring_budget():
+    # the fused plastic step's constants (CHUNK x RING_N_MAX resident
+    # ring): clean at the shipped sizes, flagged when the ring grows
+    # past what the one-hot row factor leaves of the VMEM core
+    path = "src/repro/kernels/fixture.py"
+    assert not run_checker(PallasGeometryChecker, [RING_CLEAN],
+                           paths=[path])
+    blown = RING_CLEAN.replace("RING_N_MAX = 8192", "RING_N_MAX = 16384")
+    hits = run_checker(PallasGeometryChecker, [blown], paths=[path])
+    assert any("RING_N_MAX" in f.message for f in hits)
+
+
 # ---------------------------------------------------------------------------
 # pragmas
 # ---------------------------------------------------------------------------
