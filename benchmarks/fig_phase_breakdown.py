@@ -1,0 +1,292 @@
+"""Paper-style time-per-phase breakdown of the compiled step, per law.
+
+DPSNN's companion scaling study (arXiv:1511.09325) reports not just
+total wall-clock but *time per phase* -- spike delivery vs
+synaptic/neural dynamics vs exchange -- and shows how the exponential
+connectivity law shifts cost between phases.  The host-side span
+tracer (``repro.obs.telemetry``) cannot see inside the compiled
+segment, so this harness attributes device cost by **prefix
+ablation**: for each connectivity law it times a ladder of jitted
+scans, each running one more phase of the step body than the last,
+under identical carry threading.  Phase cost is the difference between
+adjacent rungs, so the phases telescope: their sum plus the
+``residual`` (rung 0: the passthrough scan, i.e. scan/carry overhead
+plus timing noise) equals the full step's wall by construction.
+
+Ladders (pure-XLA path, ``use_kernels=False``, so the attribution is
+of the reference step, not of interpret-mode Pallas overhead):
+
+  * **static** -- passthrough -> +external_drive -> +neuron_update
+    (LIF/SFA + ring-slot consume) -> +spike_delivery (the full static
+    step) -> +recorder_compaction (device-side spike recording);
+  * **plastic** -- passthrough -> +external_drive -> +neuron_update ->
+    +spike_delivery (delivery through the live carried weights, no
+    update) -> +stdp (the full plastic body: delivery + STDP weight /
+    trace update).
+
+Commits ``BENCH_phase_breakdown.json`` (repo root: the cross-PR
+trajectory; ``results/``: the per-run CI artifact).
+``benchmarks.phase_guard`` gates the committed file's schema, phase
+coverage and residual bound in CI.
+"""
+
+import argparse
+import gc
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.connectivity import exponential_law, gaussian_law
+from repro.core.engine import (EngineConfig, build_shard_tables,
+                               deliver_event_tiers, external_drive,
+                               init_plasticity, init_sim_state,
+                               plastic_delivery_stdp, step)
+from repro.core.grid import ColumnGrid, TileDecomposition
+from repro.core.neuron import lif_sfa_step
+from repro.core.stdp import STDPParams
+from repro.core.synapses import with_local_tier
+from repro.obs.record import (init_recorder_state, record_step,
+                              recorder_spec, tile_gid_map)
+
+from .common import write_json
+
+FORMAT = "dpsnn-phase-breakdown-v1"
+STATIC_PHASES = ("external_drive", "neuron_update", "spike_delivery",
+                 "recorder_compaction")
+PLASTIC_PHASES = ("external_drive", "neuron_update", "spike_delivery",
+                  "stdp")
+
+
+def _timed_scan(body, carry, steps: int, reps: int) -> float:
+    """Median wall of a jitted ``steps``-long scan of ``body``.
+
+    The carry evolves across reps (the timed window samples steady-state
+    dynamics, not the cold start); ``gc.collect()`` is fenced before
+    each rep so a collection never lands inside a timed window."""
+    fn = jax.jit(lambda c: jax.lax.scan(body, c, None, length=steps))
+    carry, out = fn(carry)                    # compile + transient
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        gc.collect()
+        t0 = time.perf_counter()
+        carry, out = fn(carry)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _breakdown(names, ladder_times, steps: int) -> dict:
+    """Adjacent-rung differences -> per-phase wall + fraction.
+
+    ``ladder_times[0]`` is the passthrough rung: it becomes the
+    reported residual (scan/carry overhead no phase owns).  Negative
+    differences (timing noise on a near-free phase) clamp to zero; the
+    residual absorbs the clamp so fractions still sum to ~1."""
+    total = ladder_times[-1]
+    phases = {}
+    for name, lo, hi in zip(names, ladder_times[:-1], ladder_times[1:]):
+        wall = max(hi - lo, 0.0)
+        phases[name] = {"wall_s": wall, "fraction": wall / total}
+    attributed = sum(p["wall_s"] for p in phases.values())
+    return {
+        "total_s": total,
+        "ms_per_step": total / steps * 1e3,
+        "steps_per_s": steps / total,
+        "scan_overhead_s": ladder_times[0],
+        "phases": phases,
+        "residual_s": total - attributed,
+        "residual_fraction": (total - attributed) / total,
+    }
+
+
+def measure_static(law, grid=8, n_per_col=60, steps=100, reps=3) -> dict:
+    d = TileDecomposition(grid=ColumnGrid(grid, grid, n_per_col),
+                          tiles_y=1, tiles_x=1, radius=law.radius)
+    cfg = EngineConfig(decomp=d, law=law, use_kernels=False)
+    tabs = build_shard_tables(cfg)
+    n_local = cfg.spec().n_local
+    rspec = recorder_spec(cfg, steps)
+    gids = jnp.asarray(tile_gid_map(cfg.decomp, 0, 0))
+
+    # every rung repeats all previous rungs' work verbatim; outputs are
+    # consumed (summed per step) so XLA cannot dead-code a phase away
+    def passthrough(st, _):
+        key, _k_ext = jax.random.split(st["rng"])
+        i_now = st["i_ring"][st["t"] % cfg.d_ring]
+        return dict(st, rng=key, t=st["t"] + 1), jnp.sum(i_now)
+
+    def plus_drive(st, _):
+        key, k_ext = jax.random.split(st["rng"])
+        i_now = st["i_ring"][st["t"] % cfg.d_ring] \
+            + external_drive(k_ext, n_local, cfg)
+        return dict(st, rng=key, t=st["t"] + 1), jnp.sum(i_now)
+
+    def plus_neuron(st, _):
+        key, k_ext = jax.random.split(st["rng"])
+        slot = st["t"] % cfg.d_ring
+        i_now = st["i_ring"][slot] + external_drive(k_ext, n_local, cfg)
+        neuron, spikes = lif_sfa_step(st["neuron"], i_now, cfg.lif,
+                                      st["active"])
+        i_ring = st["i_ring"].at[slot].set(0.0)
+        return dict(st, neuron=neuron, i_ring=i_ring, rng=key,
+                    t=st["t"] + 1), jnp.sum(spikes)
+
+    def plus_delivery(st, _):                 # the full static step
+        new_state, spikes = step(st, tabs, cfg, halo_band_spikes=None)
+        return new_state, jnp.sum(spikes)
+
+    def plus_recorder(carry, _):
+        st, rec = carry
+        new_state, spikes = step(st, tabs, cfg, halo_band_spikes=None)
+        rec = record_step(rec, spikes, gids, st["t"], rspec)
+        return (new_state, rec), jnp.sum(spikes)
+
+    st0 = init_sim_state(cfg)
+    times = [
+        _timed_scan(passthrough, st0, steps, reps),
+        _timed_scan(plus_drive, st0, steps, reps),
+        _timed_scan(plus_neuron, st0, steps, reps),
+        _timed_scan(plus_delivery, st0, steps, reps),
+        _timed_scan(plus_recorder,
+                    (st0, init_recorder_state(rspec)), steps, reps),
+    ]
+    out = _breakdown(STATIC_PHASES, times, steps)
+    out["n_synapses"] = int(tabs["stats"]["n_synapses"])
+    return out
+
+
+def measure_plastic(law, grid=8, n_per_col=60, steps=100, reps=3) -> dict:
+    d = TileDecomposition(grid=ColumnGrid(grid, grid, n_per_col),
+                          tiles_y=1, tiles_x=1, radius=law.radius)
+    cfg = EngineConfig(decomp=d, law=law, use_kernels=False,
+                       stdp=STDPParams())
+    tabs = build_shard_tables(cfg)
+    aux = init_plasticity(tabs, cfg)
+    spec = cfg.spec()
+    n_local = spec.n_local
+    plan = spec.delivery_plan(getattr(tabs, "storage", None))[:1]
+    masks = aux["masks"][:1]
+    traces0 = {"x_pre": aux["traces"]["x_pre"][:1],
+               "x_post": aux["traces"]["x_post"]}
+
+    # same ladder discipline, with the plastic carry (state, tables,
+    # traces) threaded through every rung so rung-to-rung differences
+    # isolate phases, not carry-size changes
+    def passthrough(carry, _):
+        st, tb, tr = carry
+        key, _k_ext = jax.random.split(st["rng"])
+        i_now = st["i_ring"][st["t"] % cfg.d_ring]
+        return (dict(st, rng=key, t=st["t"] + 1), tb, tr), jnp.sum(i_now)
+
+    def plus_drive(carry, _):
+        st, tb, tr = carry
+        key, k_ext = jax.random.split(st["rng"])
+        i_now = st["i_ring"][st["t"] % cfg.d_ring] \
+            + external_drive(k_ext, n_local, cfg)
+        return (dict(st, rng=key, t=st["t"] + 1), tb, tr), jnp.sum(i_now)
+
+    def plus_neuron(carry, _):
+        st, tb, tr = carry
+        new_state, spikes = step(st, tb, cfg, halo_band_spikes=None,
+                                 deliver=False)
+        return (new_state, tb, tr), jnp.sum(spikes)
+
+    def plus_delivery(carry, _):
+        # delivery through the live carried weights, no weight update:
+        # the next rung's difference is the marginal STDP cost
+        st, tb, tr = carry
+        slot = st["t"] % cfg.d_ring
+        new_state, spikes = step(st, tb, cfg, halo_band_spikes=None,
+                                 deliver=False)
+        i_ring, ev, dr = deliver_event_tiers(
+            {"local": tb["local"], "halo": []}, spikes, [], spec,
+            new_state["i_ring"], slot, cfg.d_ring, False, plan=plan)
+        m = new_state["metrics"]
+        new_state = dict(new_state, i_ring=i_ring,
+                         metrics=dict(m, events=m["events"] + ev,
+                                      dropped=m["dropped"] + dr))
+        return (new_state, tb, tr), jnp.sum(spikes)
+
+    def plus_stdp(carry, _):                  # the full plastic body
+        st, tb, tr = carry
+        slot = st["t"] % cfg.d_ring
+        new_state, spikes = step(st, tb, cfg, halo_band_spikes=None,
+                                 deliver=False)
+        i_ring, tiers, tr, ev, dr = plastic_delivery_stdp(
+            [tb["local"]], masks, aux["inv"], tr, [spikes], spec,
+            new_state["i_ring"], slot, cfg, plan)
+        m = new_state["metrics"]
+        new_state = dict(new_state, i_ring=i_ring,
+                         metrics=dict(m, events=m["events"] + ev,
+                                      dropped=m["dropped"] + dr))
+        tb = with_local_tier(tb, tiers[0])
+        return (new_state, tb, tr), jnp.sum(spikes)
+
+    carry0 = (init_sim_state(cfg), tabs, traces0)
+    times = [
+        _timed_scan(passthrough, carry0, steps, reps),
+        _timed_scan(plus_drive, carry0, steps, reps),
+        _timed_scan(plus_neuron, carry0, steps, reps),
+        _timed_scan(plus_delivery, carry0, steps, reps),
+        _timed_scan(plus_stdp, carry0, steps, reps),
+    ]
+    out = _breakdown(PLASTIC_PHASES, times, steps)
+    out["n_synapses"] = int(tabs["stats"]["n_synapses"])
+    return out
+
+
+def run_bench(grid=8, n_per_col=60, steps=100, reps=3,
+              update_root=True) -> dict:
+    out = {
+        "format": FORMAT,
+        "grid": f"{grid}x{grid}x{n_per_col}",
+        "steps": steps, "reps": reps,
+        "backend": jax.default_backend(),
+        "use_kernels": False,
+        "note": ("Prefix-ablation phase attribution of the jitted step "
+                 "(pure-XLA path): phase cost = wall difference between "
+                 "adjacent scan ladder rungs, so phases + residual "
+                 "(passthrough scan overhead + timing noise) telescope "
+                 "to the full step's wall by construction."),
+        "laws": {},
+    }
+    for name, law in (("gaussian", gaussian_law()),
+                      ("exponential", exponential_law())):
+        out["laws"][name] = {
+            "static": measure_static(law, grid=grid, n_per_col=n_per_col,
+                                     steps=steps, reps=reps),
+            "plastic": measure_plastic(law, grid=grid,
+                                       n_per_col=n_per_col,
+                                       steps=steps, reps=reps),
+        }
+    write_json("BENCH_phase_breakdown.json", out, also_root=update_root)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--grid", type=int, default=8)
+    ap.add_argument("--n-per-col", type=int, default=60)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--no-update-root", action="store_true",
+                    help="write results/ only; keep the committed "
+                         "repo-root trajectory file untouched")
+    args = ap.parse_args(argv)
+    out = run_bench(grid=args.grid, n_per_col=args.n_per_col,
+                    steps=args.steps, reps=args.reps,
+                    update_root=not args.no_update_root)
+    for law, sections in out["laws"].items():
+        for section, b in sections.items():
+            parts = " ".join(
+                f"{n}={p['fraction']*100:.1f}%"
+                for n, p in b["phases"].items())
+            print(f"{law}/{section}: {b['ms_per_step']:.2f} ms/step  "
+                  f"{parts}  residual={b['residual_fraction']*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""CI guard for the committed time-per-phase breakdown.
+
+Validates the repo-root ``BENCH_phase_breakdown.json`` (the committed,
+cross-PR trajectory written by ``benchmarks.fig_phase_breakdown``)
+without re-measuring -- wall-clock in CI is noisy, but the *structure*
+of the committed artifact is exact:
+
+  * schema: format marker, both connectivity laws, both sections
+    (static + plastic), positive totals;
+  * full phase coverage: every paper phase present, no extras --
+    a phase silently dropped from the ladder would otherwise vanish
+    from the breakdown while the file still "validates";
+  * attribution closes: per-section phase fractions are sane and sum
+    (with the reported residual) to 1 exactly -- the prefix-ablation
+    telescoping invariant;
+  * the unattributed residual (passthrough-scan overhead + timing
+    noise) stays within ``[--min-residual, --max-residual]`` of total
+    segment wall: a residual blowing past 10% means the ladder no
+    longer brackets the real step (e.g. a new phase was added to the
+    step body but not to the ladder).
+
+Exit code 1 on any violation (the ``phase-guard`` CI check).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+from .common import REPO_ROOT
+from .fig_phase_breakdown import FORMAT, PLASTIC_PHASES, STATIC_PHASES
+
+LAWS = ("gaussian", "exponential")
+SECTIONS = {"static": STATIC_PHASES, "plastic": PLASTIC_PHASES}
+
+
+def check(base: dict, max_residual: float, min_residual: float) -> list:
+    errors = []
+    if base.get("format") != FORMAT:
+        errors.append(f"format {base.get('format')!r} != {FORMAT!r}")
+        return errors
+    laws = base.get("laws", {})
+    for law in LAWS:
+        if law not in laws:
+            errors.append(f"missing law {law!r}")
+            continue
+        for section, want_phases in SECTIONS.items():
+            b = laws[law].get(section)
+            where = f"{law}/{section}"
+            if b is None:
+                errors.append(f"{where}: missing section")
+                continue
+            if not (b.get("total_s", 0) > 0):
+                errors.append(f"{where}: total_s must be > 0")
+                continue
+            have = tuple(b.get("phases", {}))
+            if set(have) != set(want_phases):
+                errors.append(
+                    f"{where}: phase coverage {sorted(have)} != "
+                    f"{sorted(want_phases)}")
+                continue
+            frac_sum = 0.0
+            for name, p in b["phases"].items():
+                f = p.get("fraction")
+                if f is None or not (0.0 <= f <= 1.0):
+                    errors.append(f"{where}: phase {name} fraction "
+                                  f"{f!r} outside [0, 1]")
+                    continue
+                frac_sum += f
+            res = b.get("residual_fraction")
+            if res is None:
+                errors.append(f"{where}: missing residual_fraction")
+                continue
+            # telescoping invariant: residual is defined as total minus
+            # attributed, so this closes exactly up to float rounding
+            if abs(frac_sum + res - 1.0) > 1e-6:
+                errors.append(
+                    f"{where}: fractions ({frac_sum:.6f}) + residual "
+                    f"({res:.6f}) do not sum to 1")
+            if not (min_residual <= res <= max_residual):
+                errors.append(
+                    f"{where}: residual_fraction {res:.4f} outside "
+                    f"[{min_residual}, {max_residual}] -- the phase "
+                    "ladder no longer brackets the step")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline",
+                    default=os.path.join(REPO_ROOT,
+                                         "BENCH_phase_breakdown.json"))
+    ap.add_argument("--max-residual", type=float, default=0.10,
+                    help="max unattributed fraction of segment wall")
+    ap.add_argument("--min-residual", type=float, default=-0.05,
+                    help="floor (attribution noise can slightly "
+                         "over-count on near-free phases)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    errors = check(base, args.max_residual, args.min_residual)
+    for law in LAWS:
+        for section in SECTIONS:
+            b = base.get("laws", {}).get(law, {}).get(section)
+            if not b or "phases" not in b:
+                continue
+            parts = " ".join(f"{n}={p.get('fraction', 0)*100:.1f}%"
+                             for n, p in b["phases"].items())
+            print(f"{law}/{section}: {parts} "
+                  f"residual={b.get('residual_fraction', 0)*100:.1f}% ok")
+    for e in errors:
+        print(f"PHASE-GUARD VIOLATION: {e}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,7 +8,10 @@ tests at small sizes may never exercise.  Two families of findings:
 1. **Inside the traced set** (functions reachable from ``jax.jit`` /
    ``lax.scan`` / ``shard_map`` / ``pallas_call`` bodies): any call
    into ``numpy.random`` / stdlib ``random`` / ``time`` / ``datetime``,
-   host I/O (``open``/``print``/``np.save``/``json.dump``/...), and
+   telemetry spans/exporters (``repro.obs.telemetry`` /
+   ``repro.perf.trace`` -- host-side observers whose clocks would read
+   at trace time, see the pure-observer contract), host I/O
+   (``open``/``print``/``np.save``/``json.dump``/...), and
    Python ``if``/``while``/``assert``/``bool()``/``.item()`` on a
    value produced by a jax op (light taint propagation through local
    assignments; ``.shape``/``.dtype``/``len()`` reads do not taint).
@@ -29,6 +32,11 @@ from .core import Checker, Finding, FnInfo, Module, Project
 NAME = "tracer-purity"
 
 _HOST_MODULE_PREFIXES = ("numpy.random.", "random.", "time.", "datetime.")
+# runtime-telemetry spans/exporters are host-side observers by
+# contract: inside a traced closure the span's clock would read at
+# trace time and "measure" nothing (and the record append is a side
+# effect XLA may replay or elide)
+_TELEMETRY_PREFIXES = ("repro.obs.telemetry.", "repro.perf.trace.")
 _HOST_IO_CALLS = {"open", "print", "input"}
 _HOST_IO_PREFIXES = ("os.", "json.dump", "json.load", "pickle.",
                      "numpy.save", "numpy.load", "numpy.savez",
@@ -168,7 +176,15 @@ class TracerPurityChecker(Checker):
 
     def _host_call(self, mod: Module, node: ast.Call, dn: str,
                    where: str) -> Iterable[Finding]:
-        if any(dn.startswith(p) for p in _HOST_MODULE_PREFIXES):
+        if any(dn.startswith(p) for p in _TELEMETRY_PREFIXES):
+            yield Finding(
+                mod.path, node.lineno, self.name,
+                f"telemetry {dn}() inside {where}: spans are host-side "
+                "observers -- in a traced closure the clock reads at "
+                "trace time and measures nothing per step; wrap the "
+                "jitted call site instead (device-phase attribution "
+                "lives in benchmarks.fig_phase_breakdown)")
+        elif any(dn.startswith(p) for p in _HOST_MODULE_PREFIXES):
             yield Finding(
                 mod.path, node.lineno, self.name,
                 f"{dn}() inside {where}: host RNG/clock calls run at "

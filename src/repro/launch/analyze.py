@@ -26,6 +26,7 @@ import json
 import os
 
 from repro.obs.analysis import analyze_run, compare_runs, strip_private
+from repro.obs.telemetry import read_jsonl, summarize
 
 
 def parse_run(spec: str):
@@ -57,6 +58,11 @@ def main(argv=None):
                     help="moving-average window for Up/Down thresholding")
     ap.add_argument("--updown-frac", type=float, default=0.3,
                     help="Up threshold as a fraction of the p10-p90 span")
+    ap.add_argument("--telemetry", action="append", default=[],
+                    metavar="[LABEL=]FILE.jsonl",
+                    help="telemetry stream from a traced run "
+                         "(--telemetry-out); summarized into the report "
+                         "(per-span wall totals, segment throughput)")
     args = ap.parse_args(argv)
 
     runs = dict(parse_run(s) for s in args.run)
@@ -70,6 +76,10 @@ def main(argv=None):
     payload = {"runs": {k: strip_private(r) for k, r in reports.items()}}
     if len(reports) > 1:
         payload["comparison"] = compare_runs(reports)
+    if args.telemetry:
+        payload["telemetry"] = {
+            label: summarize(read_jsonl(path))
+            for label, path in (parse_run(s) for s in args.telemetry)}
 
     for label, r in reports.items():
         ud = r["population"]["updown"]
@@ -84,6 +94,13 @@ def main(argv=None):
             print(f"{pair}: mean_rate_ratio="
                   f"{'n/a' if ratio is None else round(ratio, 3)} "
                   f"rate_ks={row['rate_ks_statistic']}")
+    for label, t in payload.get("telemetry", {}).items():
+        seg = t.get("segments")
+        rate = (f"{seg['steps_per_s_mean']:.1f} steps/s over {seg['n']} "
+                "segment(s)" if seg else "no segment metrics")
+        print(f"telemetry {label}: {t['processes']} process(es), "
+              f"{sum(s['count'] for s in t['spans'].values())} span(s), "
+              f"{rate}")
 
     d = os.path.dirname(args.out)
     if d:

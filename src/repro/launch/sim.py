@@ -35,7 +35,10 @@ from repro.core.dist_engine import DistConfig
 from repro.core.engine import EngineConfig
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.launch.mesh import make_host_mesh
+from repro.obs.telemetry import (NULL, Telemetry, enable_json_logging,
+                                 set_default)
 from repro.parallel.compat import make_mesh
+from repro.perf.trace import jax_profiler_trace, write_chrome_trace
 from repro.runtime import DriverConfig, SimDriver
 
 
@@ -67,7 +70,7 @@ def parse_tiles(spec):
     return ty, tx
 
 
-def build_driver(args) -> SimDriver:
+def build_driver(args, telemetry: Telemetry = NULL) -> SimDriver:
     tiles = parse_tiles(args.tiles)
     if tiles is None:
         mesh = make_host_mesh()
@@ -107,7 +110,8 @@ def build_driver(args) -> SimDriver:
         allow_retile=args.retile,
         preempt_after_segments=args.preempt_after,
         record_events=args.record,
-        record_capacity=args.record_cap)
+        record_capacity=args.record_cap,
+        telemetry=telemetry)
 
 
 def main(argv=None):
@@ -153,6 +157,24 @@ def main(argv=None):
                     help="LTP amplitude override (with --plastic)")
     ap.add_argument("--stdp-a-minus", type=float, default=None,
                     help="LTD amplitude override (with --plastic)")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="append the runtime telemetry stream (spans + "
+                         "structured events + per-segment metrics) as "
+                         "JSON lines here; a resumed run appends to the "
+                         "same file (exactly-once records per process)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace JSON of the run's spans "
+                         "here (open in chrome://tracing or "
+                         "ui.perfetto.dev; async checkpoint/spool "
+                         "writer threads render as their own lanes)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="opt-in jax.profiler deep profile into this "
+                         "directory (XLA/device internals; heavyweight "
+                         "-- the span tracer stays cheap and separate)")
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit repro.* logs as JSON lines (one object "
+                         "per record, structured event payload "
+                         "attached) instead of human-readable text")
     ap.add_argument("--sanitize", action="store_true",
                     help="debug/CI mode: jax_debug_nans + "
                          "jax_check_tracer_leaks + owning-thread "
@@ -163,8 +185,15 @@ def main(argv=None):
 
     if args.sanitize:
         enable_sanitizers()
-    driver = build_driver(args)
-    out = driver.run(args.steps)
+    if args.log_json:
+        enable_json_logging()
+    tel = NULL
+    if args.telemetry_out or args.trace_out:
+        tel = Telemetry(jsonl_path=args.telemetry_out)
+        set_default(tel)
+    driver = build_driver(args, telemetry=tel)
+    with jax_profiler_trace(args.trace_dir):
+        out = driver.run(args.steps)
     t = int(np.max(np.asarray(out["state"]["t"])))
     rate = driver.firing_rate_hz(out["state"])
     totals = driver.metric_totals(out["state"])
@@ -202,6 +231,10 @@ def main(argv=None):
             payload["plastic"] = plastic
         with open(args.metrics_out, "w") as f:
             json.dump(payload, f, indent=1)
+    if args.telemetry_out:
+        tel.flush_jsonl()
+    if args.trace_out:
+        write_chrome_trace(tel, args.trace_out)
     return out
 
 

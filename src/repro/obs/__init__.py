@@ -15,14 +15,25 @@ distributions and slow-wave/awake activity statistics):
   * ``analysis``-- paper-family statistics from spooled logs (rate
     distributions, ISI CV, population rate, Up/Down segmentation) plus
     multi-run comparison, behind the ``repro.launch.analyze`` CLI.
+
+A fourth layer, ``telemetry``, observes the *runtime* rather than the
+spikes: a thread-aware host-side span tracer plus a structured
+per-segment metrics stream (JSONL + Chrome-trace export via
+``repro.perf.trace``), instrumenting every driver phase -- segment
+compute, checkpoint snapshot/D2H/write, spool drain, restore/retile,
+straggler stalls.  Like recording, it is a pure observer: spike trains
+and plastic weight checksums are bit-identical with tracing on or off.
 """
 
 from .record import (RecorderSpec, init_recorder_state, record_step,
                      recorder_spec, stacked_gid_maps, tile_gid_map)
 from .spool import SpikeSpooler, load_events, read_header
+from .telemetry import (Telemetry, enable_json_logging, get_default,
+                        read_jsonl, set_default, span)
 
 __all__ = [
     "RecorderSpec", "init_recorder_state", "record_step", "recorder_spec",
     "stacked_gid_maps", "tile_gid_map", "SpikeSpooler", "load_events",
-    "read_header",
+    "read_header", "Telemetry", "enable_json_logging", "get_default",
+    "read_jsonl", "set_default", "span",
 ]

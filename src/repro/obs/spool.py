@@ -36,6 +36,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from ..checkpoint.store import AsyncWriterThread
+from .telemetry import NULL, Telemetry
 
 RECORD_DTYPE = np.dtype([("step", "<i4"), ("gid", "<i4")])
 FORMAT = "dpsnn-spk-v1"
@@ -59,8 +60,10 @@ class SpikeSpooler(AsyncWriterThread):
     downstream rate (analysis normalizes by the header's n_neurons).
     """
 
-    def __init__(self, directory: str, tiles, header: Optional[dict] = None):
+    def __init__(self, directory: str, tiles, header: Optional[dict] = None,
+                 telemetry: Telemetry = NULL):
         self.directory = directory
+        self.tel = telemetry
         os.makedirs(directory, exist_ok=True)
         hpath = os.path.join(directory, "header.json")
         if os.path.exists(hpath):
@@ -98,8 +101,9 @@ class SpikeSpooler(AsyncWriterThread):
     # ---- writer thread (AsyncWriterThread) -----------------------------
     def _write(self, item):
         name, arr = item
-        with open(os.path.join(self.directory, name), "ab") as f:
-            arr.tofile(f)
+        with self.tel.span("spool.write", shard=name, events=len(arr)):
+            with open(os.path.join(self.directory, name), "ab") as f:
+                arr.tofile(f)
 
     # ---- producer API --------------------------------------------------
     def append(self, tile_y: int, tile_x: int, steps, gids):

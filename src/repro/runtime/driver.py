@@ -36,6 +36,7 @@ import numpy as np
 
 from ..checkpoint.store import (AsyncCheckpointer, latest_step,
                                 restore_checkpoint)
+from ..obs.telemetry import NULL, Telemetry
 
 log = logging.getLogger("repro.runtime")
 
@@ -53,11 +54,15 @@ class DriverConfig:
 
 
 class StragglerWatchdog:
-    """Moving-median deadline; flags steps that exceed it."""
+    """Moving-median deadline; flags steps that exceed it.  Stalls are
+    structured telemetry events (kind ``straggler``), so they land in
+    the JSONL stream alongside the spans of the step that overran."""
 
-    def __init__(self, factor: float, window: int):
+    def __init__(self, factor: float, window: int,
+                 telemetry: Telemetry = NULL):
         self.factor = factor
         self.window = window
+        self.tel = telemetry
         self.times: list = []
         self.flagged: list = []
 
@@ -68,8 +73,11 @@ class StragglerWatchdog:
             if dt > deadline:
                 is_straggler = True
                 self.flagged.append((step, dt, deadline))
-                log.warning("straggler: step %d took %.3fs (deadline "
-                            "%.3fs)", step, dt, deadline)
+                self.tel.event(
+                    "straggler", level="warning", logger=log,
+                    msg=f"straggler: step {step} took {dt:.3f}s "
+                        f"(deadline {deadline:.3f}s)",
+                    step=step, dt_s=dt, deadline_s=deadline)
         self.times.append(dt)
         if len(self.times) > self.window:
             self.times.pop(0)
@@ -88,11 +96,14 @@ class FaultTolerantLoop:
 
     step_size: int = 1
 
-    def __init__(self, cfg: DriverConfig):
+    def __init__(self, cfg: DriverConfig, telemetry: Telemetry = NULL):
         self.cfg = cfg
+        self.tel = telemetry
         self.watchdog = StragglerWatchdog(cfg.straggler_factor,
-                                          cfg.straggler_window)
-        self.ckpt = AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
+                                          cfg.straggler_window,
+                                          telemetry=telemetry)
+        self.ckpt = AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep,
+                                      telemetry=telemetry)
         self.preempted = False
         self.metrics_log: list = []
         if cfg.handle_sigterm:
@@ -102,7 +113,9 @@ class FaultTolerantLoop:
                 pass                           # non-main thread (tests)
 
     def _on_sigterm(self, *_):
-        log.warning("SIGTERM: checkpoint at next step boundary, then exit")
+        self.tel.event(
+            "preempt", level="warning", logger=log,
+            msg="SIGTERM: checkpoint at next step boundary, then exit")
         self.preempted = True
 
     # ---- subclass API -------------------------------------------------
@@ -136,16 +149,21 @@ class FaultTolerantLoop:
         while step < n_steps and not self.preempted:
             t0 = time.perf_counter()
             try:
-                state, metrics = self._step_once(state, step)
-                jax.block_until_ready(metrics)
+                with self.tel.span("segment", step=step):
+                    state, metrics = self._step_once(state, step)
+                    jax.block_until_ready(metrics)
             except Exception as e:            # noqa: BLE001 - retry path
                 # retries count consecutive failures of the SAME step
                 # (replay successes must not reset the counter, or a
                 # deterministic fault would retry forever)
                 retries = retries + 1 if step == last_fail else 1
                 last_fail = step
-                log.warning("step %d failed (%s); retry %d/%d", step, e,
-                            retries, self.cfg.max_retries)
+                self.tel.event(
+                    "step_failure", level="warning", logger=log,
+                    msg=f"step {step} failed ({e}); retry "
+                        f"{retries}/{self.cfg.max_retries}",
+                    step=step, retry=retries,
+                    max_retries=self.cfg.max_retries, error=str(e))
                 if retries > self.cfg.max_retries:
                     self.ckpt.wait()
                     raise
@@ -157,8 +175,10 @@ class FaultTolerantLoop:
                 except Exception as ce:        # noqa: BLE001
                     # a failing writer must not abort the retry; the
                     # error stays set and surfaces at the final wait()
-                    log.warning("checkpoint writer error during "
-                                "retry: %s", ce)
+                    self.tel.event(
+                        "ckpt_writer_error", level="warning", logger=log,
+                        msg=f"checkpoint writer error during retry: {ce}",
+                        step=step, error=str(ce))
                 step, state = self._restore_or_init()
                 self._on_rewind(step)
                 continue

@@ -60,6 +60,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import os
+import time
 from typing import Callable, Dict, Optional
 
 import jax
@@ -77,6 +78,7 @@ from ..core.dist_engine import (DistConfig, SimInputs, abstract_dist_inputs,
 from ..core.retile import (gather_synapse_stream, retile_config,
                            retile_plastic, retile_state, retile_tables)
 from ..core.synapses import TableStorage, compress_tables
+from ..obs.telemetry import NULL, Telemetry
 from .driver import DriverConfig, FaultTolerantLoop, log
 
 METRIC_KEYS = ("spikes", "events", "dropped")
@@ -115,8 +117,9 @@ class SimDriver(FaultTolerantLoop):
                  fault_hook: Optional[Callable] = None,
                  preempt_after_segments: Optional[int] = None,
                  record_events: bool = False,
-                 record_capacity: Optional[int] = None):
-        super().__init__(cfg)
+                 record_capacity: Optional[int] = None,
+                 telemetry: Telemetry = NULL):
+        super().__init__(cfg, telemetry=telemetry)
         if segment_steps <= 0:
             raise ValueError(f"segment_steps={segment_steps} must be > 0")
         self.dist_cfg = dist_cfg
@@ -190,7 +193,11 @@ class SimDriver(FaultTolerantLoop):
         # cumulative totals not represented in the (possibly retiled)
         # device state -- see module docstring
         self._metric_base = {k: 0.0 for k in METRIC_KEYS}
-        self._warned_drops = False
+        # previous segment's cumulative totals: per-segment *deltas* in
+        # the telemetry stream come from here (reset on every restore,
+        # so replayed segments report their own deltas, not the gap to
+        # the abandoned timeline)
+        self._prev_totals: Optional[Dict[str, float]] = None
         self.recorder = None
         self.spool = None
         self.recorder_dropped = 0
@@ -210,7 +217,8 @@ class SimDriver(FaultTolerantLoop):
                         "law": e.law.kind, "seed": e.seed,
                         "dt_ms": e.lif.dt_ms,
                         "n_neurons": d.grid.n_neurons,
-                        "recorder_capacity": self.recorder.capacity})
+                        "recorder_capacity": self.recorder.capacity},
+                telemetry=telemetry)
         # the driver never consumes the per-step spike output (the
         # spool is the per-step record), so don't materialize it
         self._sim = make_sim_fn(dist_cfg, mesh, segment_steps,
@@ -254,7 +262,8 @@ class SimDriver(FaultTolerantLoop):
             # publish and the spool worker's write would otherwise leave
             # logs permanently shorter than every manifest's frontier --
             # an unresumable run.  Drain the (small) spool queue first.
-            self.spool.wait()
+            with self.tel.span("ckpt.spool_sync", step=step):
+                self.spool.wait()
             meta["spool_offsets"] = self.spool.offsets()
             meta["recorder_dropped"] = self.recorder_dropped
         self.ckpt.save(step, state, meta=meta)
@@ -262,17 +271,21 @@ class SimDriver(FaultTolerantLoop):
     # ---- restore / init ----------------------------------------------
     def _restore_or_init(self):
         last = latest_step(self.cfg.ckpt_dir)
+        self._prev_totals = None           # deltas restart per timeline
         if last is None:
             self._metric_base = {k: 0.0 for k in METRIC_KEYS}
-            if self.spool is not None:
-                self.spool.truncate({})
-            state = init_dist_state(self.dist_cfg)
-            if self.plastic:
-                # from the host build tables: the device tables carry
-                # only the folded int8 mask, not the build weights
-                state["plastic"] = init_dist_plastic_state(
-                    self.dist_cfg, self._tables_host)
-            return 0, jax.device_put(state, self._state_sh)
+            with self.tel.span("restore.init"):
+                if self.spool is not None:
+                    self.spool.truncate({})
+                state = init_dist_state(self.dist_cfg)
+                if self.plastic:
+                    # from the host build tables: the device tables
+                    # carry only the folded int8 mask, not the build
+                    # weights
+                    state["plastic"] = init_dist_plastic_state(
+                        self.dist_cfg, self._tables_host)
+                state = jax.device_put(state, self._state_sh)
+            return 0, state
         d = self.dist_cfg.engine.decomp
         meta = checkpoint_meta(self.cfg.ckpt_dir, last)
         mine = self._meta()
@@ -311,65 +324,80 @@ class SimDriver(FaultTolerantLoop):
             # refuse rather than reinterpret (keys absent from older
             # manifests are skipped by refuse_meta_drift)
             refuse_meta_drift(meta, mine, ("storage",), self.cfg.ckpt_dir)
-            log.info("resuming from sim step %d", last)
-            state = restore_checkpoint(
-                self.cfg.ckpt_dir, last,
-                abstract_dist_inputs(self.dist_cfg, self.storage)[0],
-                shardings=self._state_sh)
+            self.tel.event("resume", logger=log,
+                           msg=f"resuming from sim step {last}",
+                           step=last)
+            with self.tel.span("restore.load", step=last):
+                state = restore_checkpoint(
+                    self.cfg.ckpt_dir, last,
+                    abstract_dist_inputs(self.dist_cfg, self.storage)[0],
+                    shardings=self._state_sh)
         else:
             if not self.allow_retile:
                 raise ValueError(
                     f"checkpoint tiling {old_tiles} != configured "
                     f"{(d.tiles_y, d.tiles_x)}; pass allow_retile=True "
                     "(CLI: --retile) to relayout the state")
-            log.info("resuming from sim step %d with retile %s -> %s",
-                     last, old_tiles, (d.tiles_y, d.tiles_x))
-            old_cfg = retile_config(self.dist_cfg, *old_tiles)
-            # the old tiling's storage descriptor (compressed caps,
-            # weight dtype) sizes the checkpointed plastic weight
-            # tiers; it rides in the manifest (any checkpoint new
-            # enough to pass the table_realization gate carries it)
-            old_storage = (TableStorage.from_meta(meta["storage"])
-                           if meta.get("storage") is not None
-                           else old_cfg.engine.spec().storage())
-            host_state = restore_checkpoint(
-                self.cfg.ckpt_dir, last,
-                abstract_dist_inputs(old_cfg, old_storage)[0])
-            # the relayout zeroes per-tile metrics: fold the restored
-            # partial sums into the global base so totals survive the
-            # retile exactly (whatever tiling we came from)
-            for k in METRIC_KEYS:
-                self._metric_base[k] += float(
-                    np.sum(np.asarray(host_state["metrics"][k])))
-            plastic_host = host_state.pop("plastic", None)
-            state = retile_state(host_state, old_cfg.engine.decomp, d)
-            if self.plastic:
-                # the checkpointed weights are laid out for the *old*
-                # tiling's structure (itself a deterministic relay of
-                # the birth realization); relay them onward by global
-                # synapse id
-                old_d = old_cfg.engine.decomp
-                old_spec = old_cfg.engine.spec()
-                if old_tiles == self._born_tiles:
-                    old_tabs = self._birth_tables
-                else:
-                    born_cfg = retile_config(self.dist_cfg,
-                                             *self._born_tiles)
-                    # compressed exactly as the old process built them
-                    # (the relay preserves per-row occupancy, so the
-                    # realized caps -- and hence the checkpointed w
-                    # shapes -- are reproduced deterministically)
-                    old_tabs = compress_tables(retile_tables(
-                        self._birth_tables, born_cfg.engine.decomp,
-                        born_cfg.engine.spec(), old_d, old_spec))
-                state["plastic"] = retile_plastic(
-                    plastic_host, old_tabs, old_d, old_spec, d,
-                    self.dist_cfg.engine.spec(), storage=self.storage)
-            state = jax.device_put(state, self._state_sh)
+            self.tel.event(
+                "resume", logger=log,
+                msg=f"resuming from sim step {last} with retile "
+                    f"{old_tiles} -> {(d.tiles_y, d.tiles_x)}",
+                step=last, old_tiles=list(old_tiles),
+                new_tiles=[d.tiles_y, d.tiles_x])
+            with self.tel.span("restore.retile", step=last,
+                               old_tiles=list(old_tiles),
+                               new_tiles=[d.tiles_y, d.tiles_x]):
+                old_cfg = retile_config(self.dist_cfg, *old_tiles)
+                # the old tiling's storage descriptor (compressed caps,
+                # weight dtype) sizes the checkpointed plastic weight
+                # tiers; it rides in the manifest (any checkpoint new
+                # enough to pass the table_realization gate carries it)
+                old_storage = (TableStorage.from_meta(meta["storage"])
+                               if meta.get("storage") is not None
+                               else old_cfg.engine.spec().storage())
+                host_state = restore_checkpoint(
+                    self.cfg.ckpt_dir, last,
+                    abstract_dist_inputs(old_cfg, old_storage)[0])
+                # the relayout zeroes per-tile metrics: fold the
+                # restored partial sums into the global base so totals
+                # survive the retile exactly (whatever tiling we came
+                # from)
+                for k in METRIC_KEYS:
+                    self._metric_base[k] += float(
+                        np.sum(np.asarray(host_state["metrics"][k])))
+                plastic_host = host_state.pop("plastic", None)
+                state = retile_state(host_state, old_cfg.engine.decomp,
+                                     d)
+                if self.plastic:
+                    # the checkpointed weights are laid out for the
+                    # *old* tiling's structure (itself a deterministic
+                    # relay of the birth realization); relay them
+                    # onward by global synapse id
+                    old_d = old_cfg.engine.decomp
+                    old_spec = old_cfg.engine.spec()
+                    if old_tiles == self._born_tiles:
+                        old_tabs = self._birth_tables
+                    else:
+                        born_cfg = retile_config(self.dist_cfg,
+                                                 *self._born_tiles)
+                        # compressed exactly as the old process built
+                        # them (the relay preserves per-row occupancy,
+                        # so the realized caps -- and hence the
+                        # checkpointed w shapes -- are reproduced
+                        # deterministically)
+                        old_tabs = compress_tables(retile_tables(
+                            self._birth_tables, born_cfg.engine.decomp,
+                            born_cfg.engine.spec(), old_d, old_spec))
+                    state["plastic"] = retile_plastic(
+                        plastic_host, old_tabs, old_d, old_spec, d,
+                        self.dist_cfg.engine.spec(),
+                        storage=self.storage)
+                state = jax.device_put(state, self._state_sh)
         if self.spool is not None:
             # exactly-once: cut every log back to this checkpoint's
             # frontier; replayed segments re-append their events
-            self.spool.truncate(meta.get("spool_offsets", {}))
+            with self.tel.span("spool.truncate", step=last):
+                self.spool.truncate(meta.get("spool_offsets", {}))
             self.recorder_dropped = int(meta.get("recorder_dropped", 0))
         return last, state
 
@@ -377,32 +405,65 @@ class SimDriver(FaultTolerantLoop):
     def _step_once(self, state, step):
         if self.fault_hook:
             self.fault_hook(step)
+        t0 = time.perf_counter()
+        with self.tel.span("segment.compute", step=step):
+            if self.recorder is not None:
+                state, _, rec = self._sim(state, self._sim_inputs)
+            else:
+                state, _ = self._sim(state, self._sim_inputs)
+            if self.tel.enabled:
+                # fence so the span covers the device work it
+                # dispatched, not just the host-side dispatch.  Pure
+                # observer: the run loop blocks on this segment's
+                # metrics immediately after anyway -- tracing only
+                # moves the wait inside the span.
+                jax.block_until_ready(state)
+        d_rec_dropped = 0
         if self.recorder is not None:
-            state, _, rec = self._sim(state, self._sim_inputs)
-            self._drain_recorder(rec)
-        else:
-            state, _ = self._sim(state, self._sim_inputs)
+            with self.tel.span("segment.spool_drain", step=step):
+                d_rec_dropped = self._drain_recorder(rec, step)
         self._segments_done += 1
         if self._preempt_after is not None \
                 and self._segments_done >= self._preempt_after:
             self.preempted = True
-        m = state["metrics"]
-        base = self._metric_base
-        dropped = base["dropped"] + float(np.asarray(jnp.sum(m["dropped"])))
-        if dropped > 0 and not self._warned_drops:
-            self._warned_drops = True
-            log.warning(
-                "event-delivery compaction dropped %d spike(s) so far "
-                "(active_cap overflow) -- results undercount synaptic "
-                "events; raise EngineConfig.cap_headroom", int(dropped))
+        totals = self.metric_totals(state)
+        prev = self._prev_totals or {k: 0.0 for k in METRIC_KEYS}
+        delta = {k: totals[k] - prev[k] for k in METRIC_KEYS}
+        self._prev_totals = totals
+        if delta["dropped"] > 0:
+            # at most once per segment, with the segment's own delta
+            # (the old run-level warning fired once and went silent
+            # however much worse the overflow got)
+            self.tel.event(
+                "delivery_drops", level="warning", logger=log,
+                msg=f"event-delivery compaction dropped "
+                    f"{int(delta['dropped'])} spike(s) this segment "
+                    f"({int(totals['dropped'])} total; active_cap "
+                    "overflow) -- results undercount synaptic events; "
+                    "raise EngineConfig.cap_headroom",
+                step=step, dropped=int(delta["dropped"]),
+                dropped_total=int(totals["dropped"]))
+        wall = time.perf_counter() - t0
+        self.tel.metrics(
+            "segment", step=step, wall_s=wall,
+            steps_per_s=self.step_size / max(wall, 1e-9),
+            d_spikes=delta["spikes"], d_events=delta["events"],
+            d_dropped=delta["dropped"],
+            d_recorder_dropped=float(d_rec_dropped),
+            spikes=totals["spikes"], events=totals["events"],
+            dropped=totals["dropped"])
         metrics = {"sim_t": jnp.max(state["t"]),
-                   "spikes": base["spikes"] + jnp.sum(m["spikes"]),
-                   "events": base["events"] + jnp.sum(m["events"]),
-                   "dropped": dropped}
+                   "spikes": totals["spikes"], "events": totals["events"],
+                   "dropped": totals["dropped"],
+                   "d_spikes": delta["spikes"],
+                   "d_events": delta["events"],
+                   "d_dropped": delta["dropped"],
+                   "d_recorder_dropped": float(d_rec_dropped)}
         return state, metrics
 
-    def _drain_recorder(self, rec):
-        """Spool one segment's event buffers (all shards)."""
+    def _drain_recorder(self, rec, step=None) -> int:
+        """Spool one segment's event buffers (all shards); returns the
+        segment's recorder-overflow drop count."""
         rec_h = jax.device_get(rec)
         ty, tx = self.dist_cfg.tiles
         for y in range(ty):
@@ -413,11 +474,15 @@ class SimDriver(FaultTolerantLoop):
         seg_dropped = int(np.sum(rec_h["dropped"]))
         if seg_dropped:
             self.recorder_dropped += seg_dropped
-            log.warning(
-                "spike recorder dropped %d event(s) this segment "
-                "(%d total) -- raise record_capacity (CLI: "
-                "--record-cap) for complete logs",
-                seg_dropped, self.recorder_dropped)
+            self.tel.event(
+                "recorder_drops", level="warning", logger=log,
+                msg=f"spike recorder dropped {seg_dropped} event(s) "
+                    f"this segment ({self.recorder_dropped} total) -- "
+                    "raise record_capacity (CLI: --record-cap) for "
+                    "complete logs",
+                step=step, dropped=seg_dropped,
+                dropped_total=self.recorder_dropped)
+        return seg_dropped
 
     # ---- host-side views ----------------------------------------------
     def metric_totals(self, state) -> Dict[str, float]:

@@ -151,6 +151,49 @@ def wall(fn):
     assert not run_checker(TracerPurityChecker, [clean])
 
 
+TELEMETRY_SPAN_BAD = '''
+import time
+
+import jax
+from repro.obs import telemetry
+
+def body(carry, x):
+    with telemetry.span("inner"):      # span inside the scan body
+        t0 = time.monotonic()          # clock reads at trace time
+        carry = carry + x
+    return carry, t0
+
+def run(xs):
+    return jax.lax.scan(body, 0.0, xs)
+'''
+
+TELEMETRY_SPAN_CLEAN = '''
+import jax
+from repro.obs import telemetry
+
+def body(carry, x):
+    return carry + x, x
+
+def run(xs):
+    with telemetry.span("segment"):    # wraps the jitted call site
+        out = jax.jit(lambda: jax.lax.scan(body, 0.0, xs))()
+    return out
+'''
+
+
+def test_tracer_purity_flags_telemetry_span_in_scan_body():
+    # the pure-observer contract, enforced statically: a span (or raw
+    # host clock) inside a traced closure measures trace time, not the
+    # compiled step -- both must be flagged; the same span wrapped
+    # around the jit call site is the documented idiom and stays quiet
+    hits = assert_flags(TracerPurityChecker, TELEMETRY_SPAN_BAD,
+                        TELEMETRY_SPAN_CLEAN)
+    assert any("telemetry repro.obs.telemetry.span" in f.message
+               for f in hits), [str(f) for f in hits]
+    assert any("time.monotonic" in f.message for f in hits), \
+        [str(f) for f in hits]
+
+
 # ---------------------------------------------------------------------------
 # dtype-bounds
 # ---------------------------------------------------------------------------
