@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core.connectivity import exponential_law, gaussian_law
 from repro.core.engine import (EngineConfig, build_shard_tables,
-                               init_plasticity, init_sim_state, run,
+                               init_plasticity, init_sim_state,
                                simulate)
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.metrics import cost_per_synaptic_event
@@ -36,7 +36,7 @@ def measure(law, grid=8, n_per_col=60, steps=400, reps=3,
     cfg = EngineConfig(decomp=d, law=law, use_kernels=use_kernels)
     tabs = build_shard_tables(cfg)
     st = init_sim_state(cfg)
-    fn = jax.jit(lambda s: run(s, tabs, cfg, steps))
+    fn = jax.jit(lambda s: simulate(s, tabs, cfg, steps))
     # warmup + state advance past transient
     st, _ = fn(st)
     jax.block_until_ready(st["t"])
@@ -146,7 +146,7 @@ def measure_pair(law, grid=8, n_per_col=60, steps=300, reps=3) -> dict:
     tabs = build_shard_tables(cfgs["xla"])
     fns, sts = {}, {}
     for arm, cfg in cfgs.items():
-        fns[arm] = jax.jit(lambda s, c=cfg: run(s, tabs, c, steps))
+        fns[arm] = jax.jit(lambda s, c=cfg: simulate(s, tabs, c, steps))
         st = init_sim_state(cfg)
         st, _ = fns[arm](st)          # warmup: compile + transient
         jax.block_until_ready(st["t"])

@@ -1,0 +1,191 @@
+"""Ensemble simulation service, end to end (CI's ensemble-smoke).
+
+One script proves the service contract:
+
+1. a **solo reference** run (state seed = member 0's seed) spools its
+   spikes to disk;
+2. a job server comes up on loopback; a 3-seed **ensemble job** is
+   POSTed as a typed ``SimJobSpec`` and runs through ONE compiled
+   segment function (asserted);
+3. while it runs, **two concurrent clients** stream the per-member
+   spike deltas through the cursor endpoint at different paces -- both
+   must end up with every spooled event exactly once;
+4. a second job with different seeds reuses the server's compiled step
+   (cache size stays 1);
+5. ``launch.analyze`` stitches per-member activity reports;
+6. member 0's spool shards are **byte-identical** to the solo
+   reference -- the ensemble axis is pure batching, not a new model.
+
+Run::
+
+    PYTHONPATH=src python examples/ensemble_service.py \\
+        --out results/ensemble_smoke.json
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+import urllib.parse
+import urllib.request
+
+GRID, NPC, LAW = 4, 20, "exponential"
+SEEDS = (0, 1, 2)
+T_STEPS, SEG = 60, 15
+
+
+def spk_digests(spool_dir):
+    out = {}
+    for root, _, files in os.walk(spool_dir):
+        for fn in sorted(files):
+            if fn.endswith(".spk"):
+                rel = os.path.relpath(os.path.join(root, fn), spool_dir)
+                with open(os.path.join(root, fn), "rb") as f:
+                    out[rel] = hashlib.sha256(f.read()).hexdigest()
+    return out
+
+
+def get(base, path):
+    with urllib.request.urlopen(base + path) as r:
+        return json.loads(r.read())
+
+
+def post(base, path, payload):
+    req = urllib.request.Request(base + path, data=payload.encode(),
+                                 method="POST")
+    with urllib.request.urlopen(req) as r:
+        return json.loads(r.read())
+
+
+def stream_until_done(base, job_id, pause, results, name):
+    cursor, total, polls = None, 0, 0
+    per_member = {}
+    while True:
+        q = "" if cursor is None else \
+            "?cursor=" + urllib.parse.quote(json.dumps(cursor))
+        r = get(base, f"/v1/sim/jobs/{job_id}/stream{q}")
+        cursor = r["cursor"]
+        for member, g in r["streams"].items():
+            per_member[member] = per_member.get(member, 0) + g["n_new"]
+            total += g["n_new"]
+        polls += 1
+        if r["done"]:
+            break
+        time.sleep(pause)
+    results[name] = {"total": total, "polls": polls,
+                     "per_member": per_member}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=os.path.join("results",
+                                                  "ensemble_smoke.json"))
+    ap.add_argument("--workdir", default=None,
+                    help="run/checkpoint directory (default: a fresh "
+                         "temp dir, removed on success)")
+    args = ap.parse_args(argv)
+
+    from repro.launch.analyze import main as analyze_main
+    from repro.launch.serve import serve_sim
+    from repro.runtime import SimJobSpec, build_sim_driver
+
+    work = args.workdir or tempfile.mkdtemp(prefix="ensemble_smoke_")
+    os.makedirs(work, exist_ok=True)
+
+    # 1. solo reference: a plain run whose dynamics seed is member 0's
+    solo_spec = SimJobSpec(ckpt_dir=os.path.join(work, "solo"),
+                           grid=GRID, n_per_column=NPC, law=LAW,
+                           state_seed=SEEDS[0], t_steps=T_STEPS,
+                           segment_steps=SEG, record=True)
+    solo = build_sim_driver(solo_spec)
+    solo.run(T_STEPS)
+    solo_digest = spk_digests(solo.spool.directory)
+
+    # 2. the service: POST the ensemble job
+    httpd, jobs = serve_sim(port=0)
+    host, port = httpd.server_address[:2]
+    base = f"http://{host}:{port}"
+    ens_dir = os.path.join(work, "ens")
+    spec = SimJobSpec(ckpt_dir=ens_dir, grid=GRID, n_per_column=NPC,
+                      law=LAW, seeds=SEEDS, t_steps=T_STEPS,
+                      segment_steps=SEG, record=True)
+    job_id = post(base, "/v1/sim/jobs", spec.to_json())["job_id"]
+
+    # 3. two concurrent cursor-streaming clients at different paces
+    results = {}
+    clients = [threading.Thread(target=stream_until_done,
+                                args=(base, job_id, pause, results, name))
+               for name, pause in (("fast", 0.05), ("slow", 0.4))]
+    for c in clients:
+        c.start()
+    job = jobs.wait(job_id, timeout=600)
+    for c in clients:
+        c.join(timeout=120)
+    assert job.status == "done", job.error
+    res = job.result
+    assert res["final_step"] == T_STEPS and res["members"] == len(SEEDS)
+    assert res["compiled_steps"] == 1, res   # ONE compiled step for M members
+    spooled = res["spooled_events"]
+    assert spooled > 0
+    for name in ("fast", "slow"):
+        assert results[name]["total"] == spooled, (name, results, spooled)
+        assert len(results[name]["per_member"]) == len(SEEDS)
+
+    # 4. a different-seeds job shares the resident compiled step
+    spec2 = SimJobSpec(ckpt_dir=os.path.join(work, "ens2"), grid=GRID,
+                       n_per_column=NPC, law=LAW, seeds=(7, 8, 9),
+                       t_steps=SEG, segment_steps=SEG, record=True)
+    job2 = jobs.wait(post(base, "/v1/sim/jobs",
+                          spec2.to_json())["job_id"], timeout=600)
+    assert job2.status == "done", job2.error
+    assert jobs.compiled_steps() == 1, jobs.compiled_steps()
+
+    # 5. stitched per-member analyze reports (next to --out, so CI
+    # ships them in the results artifact)
+    out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    report_path = os.path.join(out_dir, "ensemble_analysis.json")
+    payload = analyze_main(["--run", f"ens={ens_dir}",
+                            "--out", report_path])
+    labels = sorted(payload["runs"])
+    assert labels == [f"ens/member_{m:03d}" for m in range(len(SEEDS))]
+    assert all(r["t_steps"] == T_STEPS for r in payload["runs"].values())
+    assert "comparison" in payload
+
+    # 6. member 0's spool == the solo reference, byte for byte
+    ens_digest = spk_digests(os.path.join(ens_dir, "spool"))
+    member0 = {rel.split(os.sep, 1)[1]: h for rel, h in ens_digest.items()
+               if rel.startswith("member_000" + os.sep)}
+    assert member0 == solo_digest, (member0, solo_digest)
+
+    httpd.shutdown()
+    jobs.shutdown()
+
+    summary = {
+        "seeds": list(SEEDS), "t_steps": T_STEPS,
+        "spooled_events": spooled,
+        "clients": results,
+        "compiled_steps": res["compiled_steps"],
+        "server_compiled_steps_after_2_jobs": 1,
+        "member0_matches_solo": True,
+        "member_reports": labels,
+        "rate_hz": res["rate_hz"],
+    }
+    d = os.path.dirname(args.out)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"ensemble service smoke OK: {spooled} events, "
+          f"{len(SEEDS)} members, 1 compiled step, 2 clients -> "
+          f"{args.out}")
+    if args.workdir is None:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.core import (EngineConfig, ColumnGrid, TileDecomposition,
                         exponential_law, gaussian_law)
 from repro.core.engine import (build_shard_tables, firing_rate_hz,
-                               init_sim_state, run)
+                               init_sim_state, simulate)
 
 print("== DPSNN core ==")
 for law in (gaussian_law(), exponential_law()):
@@ -27,7 +27,7 @@ for law in (gaussian_law(), exponential_law()):
     tabs = build_shard_tables(cfg)
     state = init_sim_state(cfg)
     t0 = time.perf_counter()
-    state, _ = jax.jit(lambda s: run(s, tabs, cfg, 200))(state)
+    state, _ = jax.jit(lambda s: simulate(s, tabs, cfg, 200))(state)
     jax.block_until_ready(state["t"])
     el = time.perf_counter() - t0
     events = float(state["metrics"]["events"])

@@ -5,6 +5,7 @@ Each checker pass encodes an invariant the codebase has been burned by
 """
 
 from .core import Checker, Finding, Module, Project
+from .deprecated_api import DeprecatedApiChecker
 from .donation import DonationChecker
 from .dtype_contracts import DtypeContractsChecker
 from .meta_drift import MetaDriftChecker
@@ -14,6 +15,7 @@ from .tracer_purity import TracerPurityChecker
 
 ALL_CHECKERS = (
     TracerPurityChecker,
+    DeprecatedApiChecker,
     DtypeContractsChecker,
     DonationChecker,
     MetaDriftChecker,
@@ -23,6 +25,7 @@ ALL_CHECKERS = (
 
 __all__ = [
     "ALL_CHECKERS", "Checker", "Finding", "Module", "Project",
-    "TracerPurityChecker", "DtypeContractsChecker", "DonationChecker",
+    "TracerPurityChecker", "DeprecatedApiChecker",
+    "DtypeContractsChecker", "DonationChecker",
     "MetaDriftChecker", "PytreeAuxChecker", "PallasGeometryChecker",
 ]

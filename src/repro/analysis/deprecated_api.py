@@ -1,0 +1,95 @@
+"""Deprecated-API pass (``deprecated-api``).
+
+PR 10 retired the ``repro.core.engine.run`` / ``run_plastic`` aliases:
+``simulate(state, tables, cfg, n_steps, plasticity=...)`` is the one
+entry point, and the ensemble path (``ensemble=``) only exists there.
+A resurrected alias would silently fork the API -- new call sites
+would miss ensembles and every keyword the aliases never grew.  This
+pass keeps them dead:
+
+* **imports** of a retired name (``from repro.core.engine import
+  run``, any alias/relative spelling);
+* **calls** that resolve to a retired dotted name
+  (``engine.run(...)``, ``repro.core.run_plastic(...)``);
+* **redefinition**: a top-level ``def run`` / ``def run_plastic``
+  reappearing in ``core/engine.py`` itself.
+
+Unrelated ``run`` functions (``SimDriver.run``, ``analyze_run``,
+fixtures) are out of scope: only names resolving into
+``repro.core.engine`` (or re-exports via ``repro.core``) count.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .core import Checker, Finding, Project
+
+NAME = "deprecated-api"
+
+# retired dotted name -> replacement shown in the finding
+RETIRED = {
+    "repro.core.engine.run":
+        "repro.core.engine.simulate",
+    "repro.core.engine.run_plastic":
+        "repro.core.engine.simulate(..., plasticity=...)",
+    "repro.core.run":
+        "repro.core.engine.simulate",
+    "repro.core.run_plastic":
+        "repro.core.engine.simulate(..., plasticity=...)",
+}
+RETIRED_NAMES = ("run", "run_plastic")
+ENGINE_MODULES = ("repro.core.engine", "repro.core")
+
+
+class DeprecatedApiChecker(Checker):
+    name = NAME
+    description = ("retired engine entry points (run/run_plastic) must "
+                   "not be imported, called, or redefined -- use "
+                   "simulate(..., plasticity=...)")
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        for mod in project.modules:
+            yield from self._imports(mod)
+            yield from self._redefinition(mod)
+        for site in project.calls:
+            if site.callee in RETIRED:
+                mod = (site.enclosing.module if site.enclosing
+                       else project._module_of_call(site))
+                if mod is None:
+                    continue
+                yield Finding(
+                    mod.path, site.call.lineno, NAME,
+                    f"call to retired {site.callee}(); use "
+                    f"{RETIRED[site.callee]}")
+
+    def _imports(self, mod) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ImportFrom):
+                continue
+            if node.level:                     # relative: resolve base
+                pkg = mod.modname.split(".")[:-1]
+                base = ".".join(pkg[:len(pkg) - (node.level - 1)]
+                                + ([node.module] if node.module else []))
+            else:
+                base = node.module or ""
+            for a in node.names:
+                if f"{base}.{a.name}" in RETIRED:
+                    yield Finding(
+                        mod.path, node.lineno, NAME,
+                        f"import of retired {base}.{a.name}; use "
+                        f"{RETIRED[f'{base}.{a.name}']}")
+
+    def _redefinition(self, mod) -> Iterable[Finding]:
+        if mod.modname not in ENGINE_MODULES \
+                and not mod.path.replace("\\", "/").endswith(
+                    "core/engine.py"):
+            return
+        for node in mod.tree.body:             # top level only
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in RETIRED_NAMES:
+                yield Finding(
+                    mod.path, node.lineno, NAME,
+                    f"redefinition of retired engine alias "
+                    f"{node.name!r}; the one entry point is simulate()")

@@ -9,8 +9,8 @@ from .grid import ColumnGrid, TileDecomposition, choose_tiling
 from .neuron import LIFParams, init_state, lif_sfa_step
 from .synapses import (EntryGeometry, SynapseTables, SynapseTableSpec,
                        TableStorage, TierPlan, build_tables, compress_tables)
-from .engine import (EngineConfig, init_sim_state, build_shard_tables, run,
-                     run_plastic, init_plasticity, firing_rate_hz)
+from .engine import (EngineConfig, init_sim_state, init_ensemble_state,
+                     build_shard_tables, init_plasticity, firing_rate_hz)
 from .dist_engine import DistConfig, SimInputs, make_sim_fn, simulate
 from .retile import retile_config, retile_state
 from .stdp import STDPParams

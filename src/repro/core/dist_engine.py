@@ -68,18 +68,44 @@ class SimInputs:
 
 @dataclasses.dataclass(frozen=True)
 class DistConfig:
-    """Distribution settings layered on an EngineConfig."""
+    """Distribution settings layered on an EngineConfig.
+
+    ``ensemble_seeds``: member state seeds for an ensemble run.  When
+    set, every state leaf grows a member axis at position 2 --
+    ``(TY, TX, M, ...)``, *after* the sharded tile dims so the member
+    axis rides unsharded (replicated layout specs stay ``pspec(ndim-2)``)
+    -- and the per-shard scan is vmapped over it: one table
+    realization (``engine.seed``), one compiled step, M realizations.
+    Member m is bit-identical to a solo run with
+    ``engine.state_seed = ensemble_seeds[m]``.
+    """
 
     engine: EngineConfig
     axis_y: AxisName = "data"        # ("pod","data") on the multi-pod mesh
     axis_x: AxisName = "model"
     halo_mode: str = "strip"         # "strip" (exact) | "block" (naive)
     pack_spikes: bool = True         # bit-pack halo payload (1 bit/neuron)
+    ensemble_seeds: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.ensemble_seeds is not None:
+            seeds = tuple(int(s) for s in self.ensemble_seeds)
+            if not seeds:
+                raise ValueError("ensemble_seeds must be a non-empty "
+                                 "tuple (or None for a solo run)")
+            object.__setattr__(self, "ensemble_seeds", seeds)
 
     @property
     def tiles(self) -> Tuple[int, int]:
         d = self.engine.decomp
         return d.tiles_y, d.tiles_x
+
+    @property
+    def n_members(self) -> Optional[int]:
+        """Ensemble width M, or None for a solo run."""
+        if self.ensemble_seeds is None:
+            return None
+        return len(self.ensemble_seeds)
 
     def pspec(self, extra_dims: int = 0) -> P:
         return P(self.axis_y, self.axis_x, *([None] * extra_dims))
@@ -90,22 +116,34 @@ class DistConfig:
 # ---------------------------------------------------------------------------
 
 def init_dist_state(cfg: DistConfig) -> dict:
-    """Stack per-tile states into (TY, TX, ...) host arrays."""
+    """Stack per-tile states into (TY, TX, ...) host arrays.
+
+    Ensemble runs (``cfg.ensemble_seeds``) stack one such tree per
+    member seed along axis 2: ``(TY, TX, M, ...)``.
+    """
     ty, tx = cfg.tiles
-    states = [[init_sim_state(cfg.engine, y, x, seed_offset=y * tx + x)
-               for x in range(tx)] for y in range(ty)]
 
-    def stack(path_leaves):
-        return jnp.stack([jnp.stack(row) for row in path_leaves])
+    def init_tiles(e: EngineConfig):
+        states = [[init_sim_state(e, y, x, seed_offset=y * tx + x)
+                   for x in range(tx)] for y in range(ty)]
 
-    flat = [[jax.tree.leaves(states[y][x]) for x in range(tx)]
-            for y in range(ty)]
-    treedef = jax.tree.structure(states[0][0])
-    leaves = [stack([[flat[y][x][i] for x in range(tx)] for y in range(ty)])
-              for i in range(len(flat[0][0]))]
-    st = jax.tree.unflatten(treedef, leaves)
-    # PRNGKey leaves stack to (TY,TX,2) automatically via tree structure
-    return st
+        def stack(path_leaves):
+            return jnp.stack([jnp.stack(row) for row in path_leaves])
+
+        flat = [[jax.tree.leaves(states[y][x]) for x in range(tx)]
+                for y in range(ty)]
+        treedef = jax.tree.structure(states[0][0])
+        leaves = [stack([[flat[y][x][i] for x in range(tx)]
+                         for y in range(ty)])
+                  for i in range(len(flat[0][0]))]
+        # PRNGKey leaves stack to (TY,TX,2) automatically via structure
+        return jax.tree.unflatten(treedef, leaves)
+
+    if cfg.ensemble_seeds is None:
+        return init_tiles(cfg.engine)
+    members = [init_tiles(dataclasses.replace(cfg.engine, state_seed=s))
+               for s in cfg.ensemble_seeds]
+    return jax.tree.map(lambda *ls: jnp.stack(ls, axis=2), *members)
 
 
 def build_dist_tables(cfg: DistConfig,
@@ -165,9 +203,12 @@ def abstract_dist_inputs(cfg: DistConfig,
     e = cfg.engine
     spec = e.spec()
     n_local = spec.n_local
+    # member axis sits between the sharded tile dims and the per-shard
+    # shape so pspec(ndim-2) keeps it unsharded/replicated-free
+    mdim = () if cfg.n_members is None else (cfg.n_members,)
 
     def sd(shape, dt):
-        return jax.ShapeDtypeStruct((ty, tx) + shape, dt)
+        return jax.ShapeDtypeStruct((ty, tx) + mdim + shape, dt)
 
     state = {
         "neuron": {"v": sd((n_local,), jnp.float32),
@@ -222,10 +263,23 @@ def init_dist_plastic_state(cfg: DistConfig, tables: dict) -> dict:
             "copy taken before fold_plastic_tables")
     from .stdp import check_weight_invariant
     check_weight_invariant(tiers, cfg.engine.stdp)
+    m = cfg.n_members
+
+    def member_w(t):
+        w = np.asarray(t["w"])
+        if m is None:
+            return jnp.asarray(w)
+        # every member starts from the same build realization; weights
+        # diverge per member through the carried STDP dynamics
+        return jnp.asarray(np.ascontiguousarray(np.broadcast_to(
+            w[:, :, None], (ty, tx, m) + w.shape[2:])))
+
+    mdim = () if m is None else (m,)
+    pre_rows = tiers[0]["tgt"].shape[-2]
     return {
-        "w": [jnp.asarray(np.asarray(t["w"])) for t in tiers],
-        "x_pre": [jnp.zeros(tiers[0]["tgt"].shape[:-1], jnp.float32)],
-        "x_post": jnp.zeros((ty, tx, n_local), jnp.float32),
+        "w": [member_w(t) for t in tiers],
+        "x_pre": [jnp.zeros((ty, tx) + mdim + (pre_rows,), jnp.float32)],
+        "x_post": jnp.zeros((ty, tx) + mdim + (n_local,), jnp.float32),
     }
 
 
@@ -363,6 +417,15 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
     *pre-traces* they need arrive through the same halo exchange as
     the spikes (the owner's local trace, bit-identical to a
     locally-maintained replica), so only the local trace is carried.
+
+    **Ensemble** (``cfg.ensemble_seeds`` set, M members): state leaves
+    carry the member axis at position 2 (``init_dist_state``), the
+    per-shard scan is vmapped over it inside the shard body -- one
+    compiled step shared by all members and by every job with the same
+    shapes -- and the outputs grow the matching axis: ``per_step``
+    becomes ``(TY, TX, M, S)`` and every recorder leaf gains a leading
+    member dim after the tile dims.  The tables/inverse-index/gid
+    inputs stay member-free: all members share one realization.
     """
     e = cfg.engine
     spec = e.spec()
@@ -492,6 +555,8 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
     if recorder is not None:
         from ..obs.record import init_recorder_state, record_step
 
+    n_members = cfg.n_members
+
     def shard_body(state_blk, inputs_blk):
         state = jax.tree.map(lambda a: a[0, 0], state_blk)
         tables = jax.tree.map(lambda a: a[0, 0], inputs_blk.tables)
@@ -504,22 +569,36 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
         if recorder is not None:
             gids = inputs_blk.gids[0, 0]
 
-            def body(carry, _):
-                st, rec = carry
-                new_state, spikes = shard_step(st, tables, masks, inv)
-                rec = record_step(rec, spikes, gids, st["t"], recorder)
-                return (new_state, rec), jnp.sum(spikes)
+        def run_member(member_state):
+            """Scan one realization's carry; tables/gids close over
+            unbatched, so under vmap every member shares them."""
+            if recorder is not None:
+                def body(carry, _):
+                    st, rec = carry
+                    new_state, spikes = shard_step(st, tables, masks, inv)
+                    rec = record_step(rec, spikes, gids, st["t"], recorder)
+                    return (new_state, rec), jnp.sum(spikes)
 
-            (state, rec), per_step = jax.lax.scan(
-                body, (state, init_recorder_state(recorder)), None,
-                length=n_steps)
-        else:
+                (st, rec), per_step = jax.lax.scan(
+                    body, (member_state, init_recorder_state(recorder)),
+                    None, length=n_steps)
+                return st, per_step, rec
+
             def body(carry, _):
                 st, spikes = shard_step(carry, tables, masks, inv)
                 return st, jnp.sum(spikes)
 
-            state, per_step = jax.lax.scan(body, state, None,
-                                           length=n_steps)
+            st, per_step = jax.lax.scan(body, member_state, None,
+                                        length=n_steps)
+            return st, per_step, None
+
+        if n_members is None:
+            state, per_step, rec = run_member(state)
+        else:
+            # one trace, M member carries: the halo ppermutes inside are
+            # batched per member (vmap-of-collective is bit-identical to
+            # per-member solo exchanges; tested both laws)
+            state, per_step, rec = jax.vmap(run_member)(state)
         lift = lambda a: a[None, None]                          # noqa: E731
         out = (jax.tree.map(lift, state),
                per_step[None, None] if record_rate else None)
@@ -527,19 +606,32 @@ def make_sim_fn(cfg: DistConfig, mesh: Mesh, n_steps: int,
             out += (jax.tree.map(lift, rec),)
         return out
 
+    member_dims = 0 if n_members is None else 1
     inputs_sp = SimInputs(
         tables=table_sp,
         inv_slots=cfg.pspec(2) if plastic else None,   # inverse-index slots
         gids=cfg.pspec(1) if recorder is not None else None)  # gid maps
     in_specs = [state_sp, inputs_sp]
-    out_specs = [state_sp, cfg.pspec(1) if record_rate else None]
+    out_specs = [state_sp,
+                 cfg.pspec(1 + member_dims) if record_rate else None]
     if recorder is not None:
-        out_specs.append(jax.tree.map(lambda leaf: cfg.pspec(leaf.ndim),
-                                      init_recorder_state(recorder)))
+        out_specs.append(jax.tree.map(
+            lambda leaf: cfg.pspec(leaf.ndim + member_dims),
+            init_recorder_state(recorder)))
     mapped = shard_map(shard_body, mesh=mesh,
                        in_specs=tuple(in_specs),
                        out_specs=tuple(out_specs))
-    return jax.jit(mapped, donate_argnums=(0,))
+    # Pin the state output's shardings to the input's NamedShardings:
+    # XLA's propagation may legally mark some outputs replicated (it
+    # does under the ensemble vmap), and a donated output fed back with
+    # a different-but-equivalent sharding than the first call's input
+    # would recompile the segment on its second invocation.
+    out_shardings = [jax.tree.map(lambda sp: NamedSharding(mesh, sp),
+                                  state_sp), None]
+    if recorder is not None:
+        out_shardings.append(None)
+    return jax.jit(mapped, donate_argnums=(0,),
+                   out_shardings=tuple(out_shardings))
 
 
 def simulate(cfg: DistConfig, mesh: Mesh, n_steps: int, timed: bool = False):

@@ -12,7 +12,7 @@ Step structure (dt = 1 ms):
   4. deliver local+halo spikes through the synapse tables into future
      ring slots (event mode: cost ~ spikes x fan-out = synaptic events)
 
-State is a pytree; ``run`` is a ``lax.scan`` and jit-compatible.
+State is a pytree; ``simulate`` is a ``lax.scan`` and jit-compatible.
 """
 
 from __future__ import annotations
@@ -60,6 +60,17 @@ class EngineConfig:
     #   False -- pure-XLA reference path (deliver_events / lif_sfa_step).
     use_kernels: Union[bool, str] = "auto"
     stdp: object = None              # Optional[STDPParams]; plastic when set
+    # Seed for the *state* realization (membrane init + per-step Poisson
+    # drive).  ``None`` (default) follows ``seed``, which also fixes the
+    # synapse-table realization.  Ensemble runs share one table
+    # realization (``seed``) across members while varying ``state_seed``
+    # per member, so ensemble member m is bit-identical to a solo run
+    # with the same ``seed`` and ``state_seed=member_seed_m``.
+    state_seed: Optional[int] = None
+
+    @property
+    def state_seed_value(self) -> int:
+        return self.seed if self.state_seed is None else self.state_seed
 
     @property
     def kernels_enabled(self) -> bool:
@@ -93,8 +104,9 @@ def init_sim_state(cfg: EngineConfig, tile_y: int = 0, tile_x: int = 0,
                    seed_offset: int = 0) -> dict:
     spec = cfg.spec()
     n_local = spec.n_local
+    sseed = cfg.state_seed_value
     rng = np.random.default_rng(
-        np.random.SeedSequence([cfg.seed, 7 + seed_offset, tile_y, tile_x]))
+        np.random.SeedSequence([sseed, 7 + seed_offset, tile_y, tile_x]))
     neuron = init_state(n_local, cfg.lif, rng)
     active_cols = cfg.decomp.active_mask(tile_y, tile_x).ravel()
     active = np.repeat(active_cols, cfg.decomp.grid.n_per_column)
@@ -102,7 +114,7 @@ def init_sim_state(cfg: EngineConfig, tile_y: int = 0, tile_x: int = 0,
         "neuron": neuron,
         "i_ring": jnp.zeros((cfg.d_ring, n_local), dtype=jnp.float32),
         "t": jnp.zeros((), dtype=jnp.int32),
-        "rng": jax.random.PRNGKey(cfg.seed + 1000 * seed_offset
+        "rng": jax.random.PRNGKey(sseed + 1000 * seed_offset
                                   + 17 * tile_y + tile_x),
         "active": jnp.asarray(active),
         "metrics": {
@@ -111,6 +123,23 @@ def init_sim_state(cfg: EngineConfig, tile_y: int = 0, tile_x: int = 0,
             "dropped": jnp.zeros((), jnp.float32),
         },
     }
+
+
+def init_ensemble_state(cfg: EngineConfig, seeds) -> dict:
+    """Stack ``len(seeds)`` member states on a leading ensemble axis.
+
+    Member ``m`` is ``init_sim_state`` of the same config with
+    ``state_seed=seeds[m]`` -- every member shares the table realization
+    (``cfg.seed``) but draws its own membrane init and Poisson stream,
+    so ``simulate(..., ensemble=M)`` over this state reproduces each
+    member's solo run bit-for-bit.
+    """
+    seeds = tuple(int(s) for s in seeds)
+    if not seeds:
+        raise ValueError("ensemble needs at least one member seed")
+    members = [init_sim_state(dataclasses.replace(cfg, state_seed=s))
+               for s in seeds]
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *members)
 
 
 def build_shard_tables(cfg: EngineConfig, tile_y: int = 0,
@@ -297,7 +326,8 @@ def step(state: dict, tables: dict, cfg: EngineConfig,
 
 def simulate(state: dict, tables, cfg: EngineConfig, n_steps: int,
              plasticity: Optional[dict] = None,
-             record_spikes: bool = False, recorder=None):
+             record_spikes: bool = False, recorder=None,
+             ensemble: Optional[int] = None):
     """Scan ``n_steps`` of single-shard simulation (no halo sources).
 
     The one entry point for both static and plastic runs:
@@ -315,7 +345,26 @@ def simulate(state: dict, tables, cfg: EngineConfig, n_steps: int,
     through the scan, and the return becomes ``(state, out,
     recorder_state)``.  Recording is a pure observer: the spike trains
     are bit-identical with it on or off.
+
+    ``ensemble``: number of member realizations stacked on the leading
+    axis of every ``state`` leaf (see ``init_ensemble_state``).  The
+    solo scan is vmapped over the member axis -- one trace, one
+    compiled step, M realizations sharing the same ``tables`` -- and
+    every return leaf (final state, per-step outputs, recorder buffers,
+    plastic tables/traces) grows the matching leading member axis.
+    Member m's outputs are bit-identical to the solo run seeded with
+    that member's ``state_seed``.
     """
+    if ensemble is not None:
+        m = int(ensemble)
+        lead = {leaf.shape[0] for leaf in jax.tree_util.tree_leaves(state)}
+        if lead != {m}:
+            raise ValueError(
+                f"ensemble={m} but state leading axes are {sorted(lead)}; "
+                "build the state with init_ensemble_state(cfg, seeds)")
+        return jax.vmap(lambda st: simulate(
+            st, tables, cfg, n_steps, plasticity=plasticity,
+            record_spikes=record_spikes, recorder=recorder))(state)
     if plasticity is not None:
         if recorder is not None or record_spikes:
             raise ValueError("plastic runs do not support recorder/"
@@ -344,19 +393,6 @@ def simulate(state: dict, tables, cfg: EngineConfig, n_steps: int,
         return new_state, out
 
     return jax.lax.scan(body, state, None, length=n_steps)
-
-
-def run(state: dict, tables, cfg: EngineConfig, n_steps: int,
-        record_spikes: bool = False, recorder=None):
-    """Deprecated alias for ``simulate(...)`` (static run)."""
-    return simulate(state, tables, cfg, n_steps,
-                    record_spikes=record_spikes, recorder=recorder)
-
-
-def run_plastic(state: dict, tables, stdp_aux: dict,
-                cfg: EngineConfig, n_steps: int):
-    """Deprecated alias for ``simulate(..., plasticity=stdp_aux)``."""
-    return simulate(state, tables, cfg, n_steps, plasticity=stdp_aux)
 
 
 def _run_plastic(state: dict, tables, stdp_aux: dict,
@@ -410,9 +446,9 @@ def init_plasticity(tables: dict, cfg: EngineConfig) -> dict:
     Covers every tier the tables carry -- local plus any halo bands --
     so post-spikes reach their cross-tile incoming synapses through the
     inverse index.  Single-shard tables have no halo tiers, so this
-    reduces to the local-only index ``run_plastic`` consumes; the
-    distributed engine builds the same structures per shard via
-    ``dist_engine.build_dist_inverse_index``.
+    reduces to the local-only index the plastic ``simulate`` path
+    consumes; the distributed engine builds the same structures per
+    shard via ``dist_engine.build_dist_inverse_index``.
     """
     from .stdp import (build_inverse_index, check_weight_invariant,
                        init_stdp_state, plastic_masks)

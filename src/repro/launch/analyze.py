@@ -17,6 +17,11 @@ Gaussian vs exponential comparison (labels are free-form)::
     PYTHONPATH=src python -m repro.launch.analyze \\
         --run gauss=/tmp/snn_gauss --run expo=/tmp/snn_expo \\
         --out results/law_comparison.json
+
+An ensemble run (``--seeds``/``SimJobSpec.seeds``) expands into one
+labeled report per member stream -- ``label/member_000``, ... -- plus
+the member-vs-member comparison table; ``--member M`` restricts to one
+member.
 """
 
 from __future__ import annotations
@@ -26,6 +31,7 @@ import json
 import os
 
 from repro.obs.analysis import analyze_run, compare_runs, strip_private
+from repro.obs.spool import member_dirs, member_name
 from repro.obs.telemetry import read_jsonl, summarize
 
 
@@ -63,11 +69,34 @@ def main(argv=None):
                     help="telemetry stream from a traced run "
                          "(--telemetry-out); summarized into the report "
                          "(per-span wall totals, segment throughput)")
+    ap.add_argument("--member", type=int, default=None,
+                    help="ensemble runs: analyze only this member "
+                         "stream (default: every member, labeled "
+                         "LABEL/member_NNN)")
     args = ap.parse_args(argv)
 
     runs = dict(parse_run(s) for s in args.run)
     if len(runs) != len(args.run):
         raise SystemExit("--run labels must be unique")
+    runs, plain = {}, runs
+    saw_ensemble = False
+    for label, path in plain.items():
+        members = member_dirs(path)
+        if not members:
+            runs[label] = path
+            continue
+        saw_ensemble = True
+        if args.member is not None:
+            name = member_name(args.member)
+            if name not in members:
+                raise SystemExit(
+                    f"--member {args.member}: {path} has members "
+                    f"{sorted(members)}")
+            members = {name: members[name]}
+        for name, mpath in members.items():
+            runs[f"{label}/{name}"] = mpath
+    if args.member is not None and not saw_ensemble:
+        raise SystemExit("--member: none of the runs is an ensemble")
     reports = {label: analyze_run(path, t_steps=args.steps,
                                   bin_steps=args.bin_steps,
                                   smooth_bins=args.smooth_bins,

@@ -19,6 +19,17 @@ different tiling (needs a mesh with tiles_y*tiles_x devices, e.g.
     PYTHONPATH=src python -m repro.launch.sim --grid 4 --law gaussian \\
         --steps 200 --segment-steps 50 --ckpt-dir /tmp/snn_ckpt \\
         --tiles 2x1 --resume --retile
+
+Ensemble: N member realizations vmapped through ONE compiled step,
+each member's spikes spooled to its own ``member_NNN/`` stream::
+
+    PYTHONPATH=src python -m repro.launch.sim --grid 4 --law gaussian \\
+        --steps 100 --segment-steps 50 --seeds 0,1,2 --record \\
+        --ckpt-dir /tmp/snn_ens
+
+Flags parse into the same typed :class:`repro.runtime.SimJobSpec` the
+job server (``python -m repro.launch.serve --arch sim``) accepts as
+JSON.
 """
 
 from __future__ import annotations
@@ -29,17 +40,10 @@ import os
 
 import numpy as np
 
-from repro.checkpoint.store import latest_step
-from repro.configs.snn import reduced_case
-from repro.core.dist_engine import DistConfig
-from repro.core.engine import EngineConfig
-from repro.core.grid import ColumnGrid, TileDecomposition
-from repro.launch.mesh import make_host_mesh
 from repro.obs.telemetry import (NULL, Telemetry, enable_json_logging,
                                  set_default)
-from repro.parallel.compat import make_mesh
 from repro.perf.trace import jax_profiler_trace, write_chrome_trace
-from repro.runtime import DriverConfig, SimDriver
+from repro.runtime import JobError, SimDriver, SimJobSpec, build_sim_driver
 
 
 def enable_sanitizers():
@@ -70,48 +74,43 @@ def parse_tiles(spec):
     return ty, tx
 
 
-def build_driver(args, telemetry: Telemetry = NULL) -> SimDriver:
-    tiles = parse_tiles(args.tiles)
-    if tiles is None:
-        mesh = make_host_mesh()
-        tiles = mesh.devices.shape
-    else:
-        mesh = make_mesh(tiles, ("data", "model"))
-    case = reduced_case(args.law, grid=args.grid,
-                        n_per_column=args.neurons_per_column)
-    law = case.connectivity()
-    dec = TileDecomposition(
-        grid=ColumnGrid(*case.grid, case.n_per_column),
-        tiles_y=tiles[0], tiles_x=tiles[1], radius=law.radius)
+def spec_from_args(args) -> SimJobSpec:
+    """CLI flags -> the same typed job spec the job server accepts."""
     stdp = None
     if args.plastic:
-        from repro.core.stdp import STDPParams
-        overrides = {k: v for k, v in
-                     (("a_plus", args.stdp_a_plus),
-                      ("a_minus", args.stdp_a_minus)) if v is not None}
-        stdp = STDPParams(**overrides)
-    dist = DistConfig(engine=EngineConfig(decomp=dec, law=law,
-                                          seed=args.seed, stdp=stdp))
-    last = latest_step(args.ckpt_dir)
-    if last is not None and not args.resume:
-        raise SystemExit(
-            f"{args.ckpt_dir} already holds a checkpoint at sim step "
-            f"{last}; pass --resume to continue it or use a fresh "
-            "--ckpt-dir")
-    if args.resume and last is None:
-        # a silent fresh start here would restart a multi-hour job from
-        # step 0 while reporting success
-        raise SystemExit(
-            f"--resume: no checkpoint found in {args.ckpt_dir}")
-    return SimDriver(
-        DriverConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                     keep=args.keep),
-        dist, mesh, segment_steps=args.segment_steps,
-        allow_retile=args.retile,
-        preempt_after_segments=args.preempt_after,
-        record_events=args.record,
-        record_capacity=args.record_cap,
-        telemetry=telemetry)
+        stdp = {k: v for k, v in
+                (("a_plus", args.stdp_a_plus),
+                 ("a_minus", args.stdp_a_minus)) if v is not None}
+        stdp = stdp or None
+    seeds = None
+    if args.seeds:
+        try:
+            seeds = tuple(int(s) for s in args.seeds.split(","))
+        except ValueError:
+            raise SystemExit(
+                f"--seeds {args.seeds!r}: expected a comma-separated "
+                "list of ints, e.g. 0,1,2") from None
+    try:
+        return SimJobSpec(
+            ckpt_dir=args.ckpt_dir, grid=args.grid,
+            n_per_column=args.neurons_per_column, law=args.law,
+            seed=args.seed, state_seed=args.state_seed, seeds=seeds,
+            t_steps=args.steps, segment_steps=args.segment_steps,
+            tiles=parse_tiles(args.tiles),
+            ckpt_every=args.ckpt_every, keep=args.keep,
+            record=args.record, record_cap=args.record_cap,
+            plastic=args.plastic, stdp=stdp,
+            resume=args.resume, retile=args.retile,
+            preempt_after=args.preempt_after)
+    except ValueError as e:
+        raise SystemExit(str(e)) from None
+
+
+def build_driver(args, telemetry: Telemetry = NULL) -> SimDriver:
+    try:
+        return build_sim_driver(spec_from_args(args), telemetry=telemetry)
+    except JobError as e:
+        raise SystemExit(str(e)) from None
 
 
 def main(argv=None):
@@ -129,7 +128,17 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=1,
                     help="checkpoint every N segments")
     ap.add_argument("--keep", type=int, default=3)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="synapse-table realization seed")
+    ap.add_argument("--state-seed", type=int, default=None,
+                    help="initial-state/noise seed (default: follows "
+                         "--seed); lets two runs share one network "
+                         "realization under different dynamics")
+    ap.add_argument("--seeds", default=None,
+                    help="comma-separated member state seeds, e.g. "
+                         "0,1,2: run an ensemble of realizations "
+                         "through one compiled step, spooled per "
+                         "member (mutually exclusive with --state-seed)")
     ap.add_argument("--resume", action="store_true",
                     help="continue from the latest checkpoint")
     ap.add_argument("--retile", action="store_true",
@@ -197,11 +206,19 @@ def main(argv=None):
     t = int(np.max(np.asarray(out["state"]["t"])))
     rate = driver.firing_rate_hz(out["state"])
     totals = driver.metric_totals(out["state"])
-    plastic = (driver.plastic_summary(out["state"])
-               if driver.plastic else None)
+    plastic = plastic_members = None
+    if driver.plastic:
+        if driver.n_members is None:
+            plastic = driver.plastic_summary(out["state"])
+        else:
+            plastic_members = [driver.plastic_summary(out["state"], member=m)
+                               for m in range(driver.n_members)]
+            plastic = plastic_members[0]
     extra = (f" plastic_checksum={plastic['weight_checksum'][:12]} "
              f"w_l1_delta={plastic['w_l1_delta']:.4f}"
              if plastic else "")
+    if driver.n_members is not None:
+        extra += f" members={driver.n_members}"
     print(f"final_step={t} preempted={out['preempted']} "
           f"rate_hz={rate:.2f} "
           f"synapses={driver.table_stats['n_synapses']} "
@@ -219,6 +236,12 @@ def main(argv=None):
                    # (nonzero means results undercount synaptic events)
                    "dropped_events": totals["dropped"],
                    "metrics": out["metrics"]}
+        if driver.n_members is not None:
+            payload["ensemble_seeds"] = list(driver.dist_cfg.ensemble_seeds)
+        if plastic_members is not None:
+            # per-member learned-weight digests: the ensemble smoke
+            # asserts member m's checksum equals the matching solo run
+            payload["plastic_members"] = plastic_members
         if driver.spool is not None:
             payload["recording"] = {
                 "spooled_events": sum(driver.spool.offsets().values()),

@@ -178,8 +178,16 @@ def _infer_t_steps(run_dir: str, events: np.ndarray) -> int:
     at the final step), else the last event's step + 1 (biased low if
     the run ended silent)."""
     from ..checkpoint.store import latest_step
-    for d in (run_dir, os.path.dirname(os.path.abspath(run_dir))):
-        last = latest_step(d)
+    d = os.path.abspath(run_dir)
+    cands = [d, os.path.dirname(d)]
+    # a member stream sits at <run>/spool/member_NNN -- walk up past
+    # the spool wrapper directories to the checkpointed run itself
+    while (os.path.basename(d).startswith("member_")
+           or os.path.basename(d) == "spool"):
+        d = os.path.dirname(d)
+        cands.append(d)
+    for c in dict.fromkeys(cands):
+        last = latest_step(c)
         if last is not None:
             return int(last)
     return int(events["step"].max()) + 1 if len(events) else 0

@@ -1,6 +1,6 @@
 """Device-side spike recorder: bounded per-segment event buffers.
 
-Recording runs *inside* the simulation scan (``engine.run`` /
+Recording runs *inside* the simulation scan (``engine.simulate`` /
 ``dist_engine.make_sim_fn``): each step's spike vector is compacted to
 its spiking-row indices -- through the Pallas compaction kernel
 (``kernels.spike_compact``) or the XLA ``compact_events`` fallback,

@@ -6,6 +6,13 @@ Layout (one directory per run, by default ``<ckpt_dir>/spool``)::
         header.json                  # format + model identity (once)
         events_000_000.spk ...       # one log per recording shard
 
+    spool/                           # ensemble run (M member streams)
+        header.json                  # shared identity + ensemble_seeds
+        member_000/
+            header.json              # + member index / state_seed
+            events_000_000.spk ...
+        member_001/ ...
+
 Each ``.spk`` file is a raw little-endian stream of fixed 8-byte
 records ``(step int32, gid int32)`` -- ``RECORD_DTYPE`` -- appended in
 sim-step order by a daemon writer thread (same pattern as
@@ -20,18 +27,27 @@ failure rewind, elastic retile -- ``truncate(manifest_offsets)`` cuts
 every log back to the checkpoint's frontier and wipes logs the manifest
 does not know, so replayed segments re-append their events exactly once
 and a crash can never leave phantom events from an abandoned timeline.
+Ensemble member logs are ordinary shard logs under a subdirectory --
+their offsets ride the same manifest under their relative path, so the
+contract covers every member uniformly.
 
 Shard files are keyed by the *writing* tile, but events carry global
 neuron ids, so logs written under different tilings (before/after an
 elastic retile) concatenate into one coherent global stream --
 ``load_events`` merges and orders them by ``(step, gid)``.
+
+The append-only layout doubles as a streaming surface: a reader that
+remembers per-log record offsets (``offsets()``-shaped) can poll
+``read_new_events`` for just the records appended since its cursor --
+this is what the sim job server's incremental endpoint serves to
+concurrent clients while a run is still in flight.
 """
 
 from __future__ import annotations
 
 import json
 import os
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -46,6 +62,30 @@ def shard_name(tile_y: int, tile_x: int) -> str:
     return f"events_{tile_y:03d}_{tile_x:03d}.spk"
 
 
+def member_name(member: int) -> str:
+    return f"member_{member:03d}"
+
+
+def _write_or_validate_header(directory: str, header: dict):
+    """Create ``header.json`` or validate an existing one key-by-key."""
+    hpath = os.path.join(directory, "header.json")
+    if os.path.exists(hpath):
+        with open(hpath) as f:
+            have = json.load(f)
+        for k, v in header.items():
+            if k in have and have[k] != v:
+                raise ValueError(
+                    f"spool header {hpath} was written with {k}="
+                    f"{have[k]!r}, current run has {k}={v!r} -- "
+                    "this spool directory belongs to a different "
+                    "model; use a fresh --ckpt-dir or delete it")
+    else:
+        with open(hpath, "w") as f:
+            json.dump({"format": FORMAT,
+                       "record": [list(t[:2]) for t in RECORD_DTYPE.descr],
+                       **header}, f, indent=1)
+
+
 class SpikeSpooler(AsyncWriterThread):
     """Async writer of per-shard spike logs.
 
@@ -58,44 +98,51 @@ class SpikeSpooler(AsyncWriterThread):
     same way the driver refuses a checkpoint-meta mismatch -- silently
     appending 8x8x60 events to a 4x4x20 header would poison every
     downstream rate (analysis normalizes by the header's n_neurons).
+
+    ``members``: member state seeds of an ensemble run.  When given,
+    each member gets its own ``member_{m:03d}/`` stream (own validated
+    header carrying that member's ``state_seed``), ``append`` takes the
+    member index, and offsets/truncation key logs by their relative
+    path -- the exactly-once contract is per member log.
     """
 
     def __init__(self, directory: str, tiles, header: Optional[dict] = None,
-                 telemetry: Telemetry = NULL):
+                 telemetry: Telemetry = NULL, members=None):
         self.directory = directory
         self.tel = telemetry
+        self.members = (None if members is None
+                        else tuple(int(s) for s in members))
         os.makedirs(directory, exist_ok=True)
-        hpath = os.path.join(directory, "header.json")
-        if os.path.exists(hpath):
-            with open(hpath) as f:
-                have = json.load(f)
-            for k, v in (header or {}).items():
-                if k in have and have[k] != v:
-                    raise ValueError(
-                        f"spool header {hpath} was written with {k}="
-                        f"{have[k]!r}, current run has {k}={v!r} -- "
-                        "this spool directory belongs to a different "
-                        "model; use a fresh --ckpt-dir or delete it")
+        header = dict(header or {})
+        if self.members is None:
+            shard_dirs = [("", header)]
         else:
-            with open(hpath, "w") as f:
-                json.dump({"format": FORMAT,
-                           "record": [list(t[:2]) for t in RECORD_DTYPE.descr],
-                           **(header or {})}, f, indent=1)
+            _write_or_validate_header(
+                directory, dict(header, ensemble_seeds=list(self.members)))
+            shard_dirs = []
+            for m, s in enumerate(self.members):
+                sub = member_name(m)
+                os.makedirs(os.path.join(directory, sub), exist_ok=True)
+                shard_dirs.append(
+                    (sub, dict(header, member=m, state_seed=s)))
         self._counts: Dict[str, int] = {}
-        for ty in range(tiles[0]):
-            for tx in range(tiles[1]):
-                name = shard_name(ty, tx)
-                path = os.path.join(directory, name)
-                with open(path, "ab"):
-                    pass
-                self._counts[name] = os.path.getsize(path) \
-                    // RECORD_DTYPE.itemsize
+        for sub, hdr in shard_dirs:
+            _write_or_validate_header(os.path.join(directory, sub), hdr)
+            for ty in range(tiles[0]):
+                for tx in range(tiles[1]):
+                    name = os.path.join(sub, shard_name(ty, tx)) if sub \
+                        else shard_name(ty, tx)
+                    path = os.path.join(directory, name)
+                    with open(path, "ab"):
+                        pass
+                    self._counts[name] = os.path.getsize(path) \
+                        // RECORD_DTYPE.itemsize
         # pre-existing logs of *other* tilings (elastic resume) keep
         # appending under their own names; count them too
-        for fn in os.listdir(directory):
-            if fn.endswith(".spk") and fn not in self._counts:
-                self._counts[fn] = os.path.getsize(
-                    os.path.join(directory, fn)) // RECORD_DTYPE.itemsize
+        for name in _iter_spk(directory):
+            if name not in self._counts:
+                self._counts[name] = os.path.getsize(
+                    os.path.join(directory, name)) // RECORD_DTYPE.itemsize
         super().__init__()
 
     # ---- writer thread (AsyncWriterThread) -----------------------------
@@ -106,16 +153,25 @@ class SpikeSpooler(AsyncWriterThread):
                 arr.tofile(f)
 
     # ---- producer API --------------------------------------------------
-    def append(self, tile_y: int, tile_x: int, steps, gids):
+    def append(self, tile_y: int, tile_x: int, steps, gids,
+               member: Optional[int] = None):
         """Enqueue one shard's segment events (valid prefixes only).
 
         The shard's offset advances *synchronously*, so ``offsets()``
         read immediately after covers this append -- the property the
-        checkpoint-manifest snapshot relies on."""
+        checkpoint-manifest snapshot relies on.  Ensemble spoolers
+        require the ``member`` index (and solo spoolers refuse one)."""
         self._assert_owner("append")
+        if (member is None) != (self.members is None):
+            raise ValueError(
+                f"append(member={member!r}) on a spooler with members="
+                f"{self.members!r}: member index is required exactly "
+                "when the spool is an ensemble")
         steps = np.asarray(steps)
         n = len(steps)
         name = shard_name(tile_y, tile_x)
+        if member is not None:
+            name = os.path.join(member_name(member), name)
         if name not in self._counts:          # a tiling seen mid-run
             with open(os.path.join(self.directory, name), "ab"):
                 pass
@@ -130,7 +186,9 @@ class SpikeSpooler(AsyncWriterThread):
 
     def offsets(self) -> Dict[str, int]:
         """Per-shard event counts covering every ``append`` so far (the
-        writes themselves may still be in flight)."""
+        writes themselves may still be in flight).  Keys are paths
+        relative to the spool directory (``member_000/...`` for
+        ensemble streams)."""
         self._assert_owner("offsets")
         return dict(self._counts)
 
@@ -170,9 +228,22 @@ def _spool_dir(run_dir: str) -> str:
     return sub if os.path.isdir(sub) else run_dir
 
 
+def _iter_spk(directory: str):
+    """Relative paths of every ``.spk`` log: top level plus one level of
+    ``member_*`` subdirectories, in sorted order."""
+    for fn in sorted(os.listdir(directory)):
+        path = os.path.join(directory, fn)
+        if fn.endswith(".spk"):
+            yield fn
+        elif fn.startswith("member_") and os.path.isdir(path):
+            for sub in sorted(os.listdir(path)):
+                if sub.endswith(".spk"):
+                    yield os.path.join(fn, sub)
+
+
 def read_header(run_dir: str) -> dict:
     """The spool's ``header.json``; ``run_dir`` may be the run (ckpt)
-    directory or the spool directory itself."""
+    directory, the spool directory, or one member's stream directory."""
     with open(os.path.join(_spool_dir(run_dir), "header.json")) as f:
         h = json.load(f)
     if h.get("format") != FORMAT:
@@ -181,8 +252,22 @@ def read_header(run_dir: str) -> dict:
     return h
 
 
+def member_dirs(run_dir: str) -> Dict[str, str]:
+    """Ensemble member streams under a run: ``{"member_000": abspath,
+    ...}`` in member order; empty for a solo run."""
+    d = _spool_dir(run_dir)
+    out = {}
+    for fn in sorted(os.listdir(d)) if os.path.isdir(d) else []:
+        path = os.path.join(d, fn)
+        if fn.startswith("member_") and os.path.isdir(path):
+            out[fn] = path
+    return out
+
+
 def shard_events(run_dir: str) -> Dict[str, np.ndarray]:
-    """Per-shard raw event arrays (file order preserved)."""
+    """Per-shard raw event arrays (file order preserved).  For an
+    ensemble run this is ONE member's stream directory -- pass a
+    ``member_dirs`` entry, not the spool root."""
     d = _spool_dir(run_dir)
     out = {}
     for fn in sorted(os.listdir(d)):
@@ -200,3 +285,33 @@ def load_events(run_dir: str) -> np.ndarray:
         raise FileNotFoundError(f"no .spk spike logs under {run_dir}")
     ev = np.concatenate(shards) if len(shards) > 1 else shards[0]
     return ev[np.lexsort((ev["gid"], ev["step"]))]
+
+
+def read_new_events(run_dir: str, cursor: Optional[Dict[str, int]] = None
+                    ) -> Tuple[Dict[str, np.ndarray], Dict[str, int]]:
+    """Incremental read: records appended since ``cursor``.
+
+    ``cursor`` maps relative log paths to record offsets (the shape of
+    ``SpikeSpooler.offsets()``); ``None`` reads from the beginning.
+    Returns ``(new_events, new_cursor)`` where ``new_events`` holds the
+    per-log arrays appended at/after the cursor (only logs with new
+    records appear) and ``new_cursor`` covers every log seen.  Safe
+    against concurrent appends: a torn trailing record (partial 8-byte
+    write in flight) is excluded by reading whole records only, and the
+    writer is append-only, so successive cursors are monotone.  This is
+    the read side of the exactly-once offset contract and the backing
+    of the job server's streaming endpoint.
+    """
+    d = _spool_dir(run_dir)
+    cursor = dict(cursor or {})
+    new = {}
+    for name in _iter_spk(d):
+        path = os.path.join(d, name)
+        have = os.path.getsize(path) // RECORD_DTYPE.itemsize
+        done = int(cursor.get(name, 0))
+        if have > done:
+            new[name] = np.fromfile(
+                path, dtype=RECORD_DTYPE, count=have - done,
+                offset=done * RECORD_DTYPE.itemsize)
+        cursor[name] = max(have, done)
+    return new, cursor

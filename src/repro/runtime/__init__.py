@@ -2,4 +2,5 @@
 
 from .driver import (TrainDriver, DriverConfig, FaultTolerantLoop,
                      StragglerWatchdog)
-from .sim_driver import SimDriver
+from .sim_driver import SimDriver, sim_fingerprint
+from .jobs import JobError, SimJobSpec, build_sim_driver

@@ -43,6 +43,15 @@ driver gives the distributed SNN engine the same operational envelope:
     ``born_tiles``, the tiling the realization was sampled on, from
     which any later tiling's table layout is derived deterministically.
 
+  * **ensembles** (``dist_cfg.ensemble_seeds`` set): the driver runs M
+    member realizations through the one compiled segment function
+    (state stacked on a member axis, see ``core.dist_engine``), drains
+    each member's recorder rows into its own ``member_{m:03d}/`` spool
+    stream, and carries the member seeds in the checkpoint meta --
+    preempt→resume restores every member's carry and spool frontier
+    exactly-once.  Elastic retiling of ensembles is refused (resume on
+    the checkpointed tiling).
+
 The tiling, grid, seed and connectivity law of the saved state ride
 inside each checkpoint's manifest (atomic with the checkpoint), so a
 resuming process detects a geometry change -- and refuses a silently
@@ -84,6 +93,27 @@ from .driver import DriverConfig, FaultTolerantLoop, log
 METRIC_KEYS = ("spikes", "events", "dropped")
 
 
+def sim_fingerprint(dist_cfg: DistConfig, segment_steps: int, recorder,
+                    storage) -> tuple:
+    """Cache key for the compiled segment function.
+
+    Everything that shapes the traced program is in the key; everything
+    that only changes *values* is normalized out -- the seed (tables
+    are data, not structure), the member seeds (only the ensemble width
+    M is a shape), the state seed.  Two jobs differing only in seeds
+    therefore share one compiled step when constructed with the same
+    ``sim_cache`` dict -- the server's resident-mesh contract.
+    """
+    e = dataclasses.replace(dist_cfg.engine, seed=0, state_seed=None)
+    seeds = dist_cfg.ensemble_seeds
+    dc = dataclasses.replace(
+        dist_cfg, engine=e,
+        ensemble_seeds=None if seeds is None
+        else tuple(range(len(seeds))))
+    return (repr(dc), int(segment_steps), repr(recorder),
+            repr(storage.meta() if storage is not None else None))
+
+
 class SimDriver(FaultTolerantLoop):
     """Segmented, checkpointed distributed SNN simulation.
 
@@ -118,7 +148,9 @@ class SimDriver(FaultTolerantLoop):
                  preempt_after_segments: Optional[int] = None,
                  record_events: bool = False,
                  record_capacity: Optional[int] = None,
-                 telemetry: Telemetry = NULL):
+                 telemetry: Telemetry = NULL,
+                 sim_cache: Optional[dict] = None,
+                 job_meta: Optional[dict] = None):
         super().__init__(cfg, telemetry=telemetry)
         if segment_steps <= 0:
             raise ValueError(f"segment_steps={segment_steps} must be > 0")
@@ -131,6 +163,8 @@ class SimDriver(FaultTolerantLoop):
         self._segments_done = 0
         e = dist_cfg.engine
         self.plastic = e.stdp is not None
+        self.n_members = dist_cfg.n_members
+        self._job_meta = job_meta
 
         # ---- synapse tables ------------------------------------------
         # A plastic realization is *born* on one tiling and relaid to
@@ -210,20 +244,38 @@ class SimDriver(FaultTolerantLoop):
             self._gids = jax.device_put(
                 jnp.asarray(stacked_gid_maps(d)),
                 NamedSharding(mesh, dist_cfg.pspec(1)))
+            header = {"grid": [d.grid.height, d.grid.width,
+                               d.grid.n_per_column],
+                      "law": e.law.kind, "seed": e.seed,
+                      "dt_ms": e.lif.dt_ms,
+                      "n_neurons": d.grid.n_neurons,
+                      "recorder_capacity": self.recorder.capacity}
+            if self.n_members is None:
+                # the member spoolers carry their own state_seed; a
+                # solo spool records it at the top so an ensemble
+                # member's stream is comparable header-for-header
+                header["state_seed"] = e.state_seed_value
             self.spool = SpikeSpooler(
                 os.path.join(cfg.ckpt_dir, "spool"), dist_cfg.tiles,
-                header={"grid": [d.grid.height, d.grid.width,
-                                 d.grid.n_per_column],
-                        "law": e.law.kind, "seed": e.seed,
-                        "dt_ms": e.lif.dt_ms,
-                        "n_neurons": d.grid.n_neurons,
-                        "recorder_capacity": self.recorder.capacity},
-                telemetry=telemetry)
+                header=header, telemetry=telemetry,
+                members=dist_cfg.ensemble_seeds)
         # the driver never consumes the per-step spike output (the
-        # spool is the per-step record), so don't materialize it
-        self._sim = make_sim_fn(dist_cfg, mesh, segment_steps,
-                                record_rate=False, recorder=self.recorder,
-                                storage=self.storage)
+        # spool is the per-step record), so don't materialize it.
+        # ``sim_cache``: a caller-owned dict (the job server's resident
+        # compiled-mesh cache) mapping ``sim_fingerprint`` keys to the
+        # jitted segment fn -- jobs differing only in seeds share one
+        # compiled step.
+        self._sim_key = sim_fingerprint(dist_cfg, segment_steps,
+                                        self.recorder, self.storage)
+        self._sim = None if sim_cache is None else sim_cache.get(
+            self._sim_key)
+        if self._sim is None:
+            self._sim = make_sim_fn(dist_cfg, mesh, segment_steps,
+                                    record_rate=False,
+                                    recorder=self.recorder,
+                                    storage=self.storage)
+            if sim_cache is not None:
+                sim_cache[self._sim_key] = self._sim
         self._sim_inputs = SimInputs(
             tables=self.tables, inv_slots=self._inv_slots,
             gids=self._gids if self.recorder is not None else None)
@@ -236,6 +288,7 @@ class SimDriver(FaultTolerantLoop):
         return {"tiles_y": d.tiles_y, "tiles_x": d.tiles_x,
                 "grid": [d.grid.height, d.grid.width, d.grid.n_per_column],
                 "law": e.law.kind, "radius": d.radius, "seed": e.seed,
+                "state_seed": e.state_seed_value,
                 "table_realization": TABLE_REALIZATION_VERSION,
                 "storage": self.storage.meta(),
                 # repro-lint: ignore[meta-drift] report-only: resume is
@@ -243,6 +296,12 @@ class SimDriver(FaultTolerantLoop):
                 "segment_steps": self.step_size,
                 "stdp": (dataclasses.asdict(e.stdp)
                          if self.plastic else None),
+                "ensemble_seeds": (None if self.n_members is None
+                                   else list(self.dist_cfg.ensemble_seeds)),
+                # repro-lint: ignore[meta-drift] report-only: full job
+                # provenance (the typed SimJobSpec); identity fields are
+                # refused individually above
+                "job": self._job_meta,
                 "born_tiles": (list(self._born_tiles)
                                if self.plastic else None),
                 "metric_base": dict(self._metric_base)}
@@ -310,7 +369,8 @@ class SimDriver(FaultTolerantLoop):
         # checkpoints are skipped: pre-versioning manifests)
         refuse_meta_drift(
             meta, mine,
-            ("grid", "law", "radius", "seed", "table_realization"),
+            ("grid", "law", "radius", "seed", "state_seed",
+             "ensemble_seeds", "table_realization"),
             self.cfg.ckpt_dir)
         base = meta.get("metric_base", {})
         self._metric_base = {k: float(base.get(k, 0.0))
@@ -333,6 +393,13 @@ class SimDriver(FaultTolerantLoop):
                     abstract_dist_inputs(self.dist_cfg, self.storage)[0],
                     shardings=self._state_sh)
         else:
+            if self.n_members is not None:
+                raise ValueError(
+                    f"checkpoint tiling {old_tiles} != configured "
+                    f"{(d.tiles_y, d.tiles_x)} on an ensemble run: "
+                    "elastic retiling of the stacked member axis is not "
+                    "supported yet -- resume ensembles on the tiling "
+                    "they were checkpointed under")
             if not self.allow_retile:
                 raise ValueError(
                     f"checkpoint tiling {old_tiles} != configured "
@@ -462,15 +529,22 @@ class SimDriver(FaultTolerantLoop):
         return state, metrics
 
     def _drain_recorder(self, rec, step=None) -> int:
-        """Spool one segment's event buffers (all shards); returns the
-        segment's recorder-overflow drop count."""
+        """Spool one segment's event buffers (all shards, all ensemble
+        members); returns the segment's recorder-overflow drop count."""
         rec_h = jax.device_get(rec)
         ty, tx = self.dist_cfg.tiles
         for y in range(ty):
             for x in range(tx):
-                cnt = int(rec_h["count"][y, x])
-                self.spool.append(y, x, rec_h["step"][y, x, :cnt],
-                                  rec_h["gid"][y, x, :cnt])
+                if self.n_members is None:
+                    cnt = int(rec_h["count"][y, x])
+                    self.spool.append(y, x, rec_h["step"][y, x, :cnt],
+                                      rec_h["gid"][y, x, :cnt])
+                    continue
+                for m in range(self.n_members):
+                    cnt = int(rec_h["count"][y, x, m])
+                    self.spool.append(
+                        y, x, rec_h["step"][y, x, m, :cnt],
+                        rec_h["gid"][y, x, m, :cnt], member=m)
         seg_dropped = int(np.sum(rec_h["dropped"]))
         if seg_dropped:
             self.recorder_dropped += seg_dropped
@@ -502,7 +576,8 @@ class SimDriver(FaultTolerantLoop):
         return self.metric_totals(state)["spikes"] \
             / max(n_active, 1.0) / max(sim_sec, 1e-9)
 
-    def spike_counts(self, n_steps: Optional[int] = None) -> np.ndarray:
+    def spike_counts(self, n_steps: Optional[int] = None,
+                     member: Optional[int] = None) -> np.ndarray:
         """Global per-step spike counts, read back from the spooled
         spike logs (sim step order; the exactly-once truncation
         contract guarantees replayed segments appear once).  Covers the
@@ -513,14 +588,23 @@ class SimDriver(FaultTolerantLoop):
         spike would otherwise be trimmed).  Requires
         ``record_events=True``: the spool *is* the per-step record (the
         former per-step host dict duplicated it and grew unboundedly).
+        Ensemble runs read one member's stream -- pass ``member``.
         """
         if self.spool is None:
             raise ValueError(
                 "spike_counts() reads the spike spool; construct the "
                 "driver with record_events=True")
-        from ..obs.spool import RECORD_DTYPE, shard_events
+        from ..obs.spool import RECORD_DTYPE, member_name, shard_events
+        if (member is None) != (self.n_members is None):
+            raise ValueError(
+                f"spike_counts(member={member!r}) on a driver with "
+                f"n_members={self.n_members!r}: pass a member index "
+                "exactly when the run is an ensemble")
         self.spool.wait()
-        shards = list(shard_events(self.spool.directory).values())
+        d = self.spool.directory
+        if member is not None:
+            d = os.path.join(d, member_name(member))
+        shards = list(shard_events(d).values())
         ev = (np.concatenate(shards) if shards
               else np.empty(0, RECORD_DTYPE))
         if n_steps is None:
@@ -528,7 +612,7 @@ class SimDriver(FaultTolerantLoop):
         return np.bincount(ev["step"], minlength=n_steps)[:n_steps] \
             .astype(np.float32)
 
-    def plastic_summary(self, state) -> dict:
+    def plastic_summary(self, state, member: Optional[int] = None) -> dict:
         """Tiling-invariant digest of the live plastic tables.
 
         ``weight_checksum`` hashes every synapse's ``(pre_gid,
@@ -536,17 +620,26 @@ class SimDriver(FaultTolerantLoop):
         order, so two runs agree iff their learned weights are
         bit-identical per global synapse -- whatever tilings either
         went through.  Drift stats compare against the birth weights.
+        Ensemble runs digest one member's carried weights -- pass
+        ``member``.
         """
         if not self.plastic:
             raise ValueError("plastic_summary() needs a plastic engine "
                              "(EngineConfig.stdp set)")
+        if (member is None) != (self.n_members is None):
+            raise ValueError(
+                f"plastic_summary(member={member!r}) on a driver with "
+                f"n_members={self.n_members!r}: pass a member index "
+                "exactly when the run is an ensemble")
         e = self.dist_cfg.engine
         d, spec = e.decomp, e.spec()
         pl = state["plastic"]
+        pick = ((lambda w: np.asarray(w)) if member is None
+                else (lambda w: np.asarray(w)[:, :, member]))
         live_tabs = {
             "local": dict(self._tables_host["local"],
-                          w=np.asarray(pl["w"][0])),
-            "halo": [dict(t, w=np.asarray(pw)) for t, pw in
+                          w=pick(pl["w"][0])),
+            "halo": [dict(t, w=pick(pw)) for t, pw in
                      zip(self._tables_host["halo"], pl["w"][1:])],
         }
         live = gather_synapse_stream(live_tabs, d, spec)
@@ -570,6 +663,15 @@ class SimDriver(FaultTolerantLoop):
             "w_sum": float(w.sum()),
             "w_l1_delta": float(np.abs(w - birth["w"])[mask].sum()),
         }
+
+    def compiled_step_cache_size(self) -> Optional[int]:
+        """Compiled-program count of this driver's segment function
+        (``None`` when the runtime lacks jit cache introspection).
+        Stays 1 however many segments -- and, through a shared
+        ``sim_cache``, however many same-shaped jobs -- ran through it:
+        the one-compile contract the ensemble service asserts in CI."""
+        return (self._sim._cache_size()
+                if hasattr(self._sim, "_cache_size") else None)
 
     def run(self, n_steps: int):
         out = super().run(n_steps)

@@ -8,7 +8,7 @@ import pytest
 from repro.core.connectivity import exponential_law, gaussian_law
 from repro.core.engine import (EngineConfig, build_shard_tables,
                                firing_rate_hz, init_plasticity,
-                               init_sim_state, run, run_plastic)
+                               init_sim_state, simulate)
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.neuron import LIFParams, lif_sfa_step
 from repro.core.stdp import STDPParams
@@ -39,7 +39,7 @@ def test_run_no_nan_and_reasonable_rate():
     cfg = _cfg()
     tabs = build_shard_tables(cfg)
     st = init_sim_state(cfg)
-    st2, per_step = jax.jit(lambda s: run(s, tabs, cfg, 200))(st)
+    st2, per_step = jax.jit(lambda s: simulate(s, tabs, cfg, 200))(st)
     assert np.isfinite(np.asarray(st2["neuron"]["v"])).all()
     rate = firing_rate_hz(st2, cfg, 200)
     assert 0.1 < rate < 100.0
@@ -53,9 +53,9 @@ def test_event_mode_equals_gather_all_dynamics():
     cfg_e = _cfg(mode="event")
     cfg_g = _cfg(mode="gather_all")
     tabs = build_shard_tables(cfg_e)
-    s_e, spikes_e = jax.jit(lambda s: run(s, tabs, cfg_e, 100))(
+    s_e, spikes_e = jax.jit(lambda s: simulate(s, tabs, cfg_e, 100))(
         init_sim_state(cfg_e))
-    s_g, spikes_g = jax.jit(lambda s: run(s, tabs, cfg_g, 100))(
+    s_g, spikes_g = jax.jit(lambda s: simulate(s, tabs, cfg_g, 100))(
         init_sim_state(cfg_g))
     np.testing.assert_array_equal(np.asarray(spikes_e),
                                   np.asarray(spikes_g))
@@ -75,7 +75,7 @@ def test_rate_separation_exponential_vs_gaussian():
         # the ratio grows toward the paper's ~4.5x with grid size)
         cfg = _cfg(law=law, n_per_col=60, grid=8)
         tabs = build_shard_tables(cfg)
-        st, _ = jax.jit(lambda s, c=cfg, t=tabs: run(s, t, c, 300))(
+        st, _ = jax.jit(lambda s, c=cfg, t=tabs: simulate(s, t, c, 300))(
             init_sim_state(cfg))
         rates[name] = firing_rate_hz(st, cfg, 300)
     assert rates["expo"] > 1.4 * rates["gauss"], rates
@@ -89,7 +89,7 @@ def test_stdp_potentiation_depression_ordering():
     w0 = np.asarray(tabs["local"]["w"]).copy()
     st = init_sim_state(cfg)
     (st2, tabs2, traces), _ = jax.jit(
-        lambda s, t: run_plastic(s, t, aux, cfg, 120))(st, tabs)
+        lambda s, t: simulate(s, t, cfg, 120, plasticity=aux))(st, tabs)
     w1 = np.asarray(tabs2["local"]["w"])
     assert np.abs(w1 - w0).sum() > 0
     plastic = w0 > 0

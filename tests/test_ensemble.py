@@ -1,0 +1,215 @@
+"""Ensemble-batched simulation: member m of an N-member ensemble is
+bit-identical to the solo run with ``state_seed=seeds[m]`` -- spike
+trains, spool bytes, plastic checksums -- and the whole ensemble goes
+through ONE compiled segment function."""
+
+import dataclasses
+import hashlib
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.connectivity import exponential_law, gaussian_law
+from repro.core.dist_engine import DistConfig
+from repro.core.engine import (EngineConfig, build_shard_tables,
+                               init_ensemble_state, init_plasticity,
+                               init_sim_state, simulate)
+from repro.core.grid import ColumnGrid, TileDecomposition
+from repro.core.stdp import STDPParams
+from repro.parallel.compat import make_mesh
+from repro.runtime import DriverConfig, SimDriver
+from repro.obs.spool import member_name
+
+SEEDS = (0, 7, 13)
+N = 40
+
+
+def _cfg(law, seed=3, state_seed=None, stdp=None):
+    dec = TileDecomposition(grid=ColumnGrid(4, 4, 10), tiles_y=1,
+                            tiles_x=1, radius=law.radius)
+    return EngineConfig(decomp=dec, law=law, seed=seed,
+                        state_seed=state_seed, stdp=stdp)
+
+
+def _leaves(tree):
+    return [np.asarray(l) for l in jax.tree.leaves(tree)]
+
+
+@pytest.mark.parametrize("law_fn", [gaussian_law, exponential_law],
+                         ids=["gaussian", "exponential"])
+def test_ensemble_of_one_bit_identical_static(law_fn):
+    """vmap over a singleton member axis is the identity: same spikes,
+    same final state as the plain path."""
+    cfg = _cfg(law_fn())
+    tabs = build_shard_tables(cfg)
+    solo_s, solo_steps = simulate(init_sim_state(cfg), tabs, cfg, N)
+    ens_cfg = dataclasses.replace(cfg, state_seed=None)
+    ens_s, ens_steps = simulate(
+        init_ensemble_state(ens_cfg, [cfg.state_seed_value]),
+        tabs, ens_cfg, N, ensemble=1)
+    np.testing.assert_array_equal(np.asarray(solo_steps),
+                                  np.asarray(ens_steps)[0])
+    for a, b in zip(_leaves(solo_s), _leaves(ens_s)):
+        np.testing.assert_array_equal(a, b[0])
+
+
+@pytest.mark.parametrize("law_fn", [gaussian_law, exponential_law],
+                         ids=["gaussian", "exponential"])
+def test_ensemble_of_one_bit_identical_plastic(law_fn):
+    cfg = _cfg(law_fn(), stdp=STDPParams())
+    tabs = build_shard_tables(cfg)
+    aux = init_plasticity(tabs, cfg)
+    (solo_s, solo_w, solo_tr), solo_steps = simulate(
+        init_sim_state(cfg), tabs, cfg, N, plasticity=aux)
+    (ens_s, ens_w, ens_tr), ens_steps = simulate(
+        init_ensemble_state(cfg, [cfg.state_seed_value]), tabs, cfg, N,
+        plasticity=aux, ensemble=1)
+    np.testing.assert_array_equal(np.asarray(solo_steps),
+                                  np.asarray(ens_steps)[0])
+    for tree_a, tree_b in ((solo_s, ens_s), (solo_w, ens_w),
+                           (solo_tr, ens_tr)):
+        for a, b in zip(_leaves(tree_a), _leaves(tree_b)):
+            np.testing.assert_array_equal(a, b[0])
+
+
+def test_ensemble_members_differ():
+    """Different member seeds actually produce different dynamics
+    (guards against a broadcast bug making every member member 0)."""
+    cfg = _cfg(gaussian_law())
+    tabs = build_shard_tables(cfg)
+    _, steps = simulate(init_ensemble_state(cfg, SEEDS), tabs, cfg, N,
+                        ensemble=len(SEEDS))
+    steps = np.asarray(steps)
+    assert steps.shape[0] == len(SEEDS)
+    assert not np.array_equal(steps[0], steps[1])
+
+
+# ---------------------------------------------------------------------------
+# driver-level: spool byte-identity, one compile, preempt -> resume
+# ---------------------------------------------------------------------------
+
+def _dist(seed=3, state_seed=None, seeds=None, stdp=None):
+    law = gaussian_law()
+    dec = TileDecomposition(grid=ColumnGrid(4, 4, 10), tiles_y=1,
+                            tiles_x=1, radius=law.radius)
+    return DistConfig(engine=EngineConfig(decomp=dec, law=law, seed=seed,
+                                          state_seed=state_seed,
+                                          stdp=stdp),
+                      ensemble_seeds=seeds)
+
+
+def _driver(ckpt_dir, dist, seg=10, cache=None, **kw):
+    cfg = DriverConfig(ckpt_dir=str(ckpt_dir), ckpt_every=1,
+                       backoff_s=0.01, handle_sigterm=False)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    return SimDriver(cfg, dist, mesh, segment_steps=seg, sim_cache=cache,
+                     **kw)
+
+
+def _spk_digests(spool_dir):
+    out = {}
+    for root, _, files in os.walk(spool_dir):
+        for fn in sorted(files):
+            if fn.endswith(".spk"):
+                rel = os.path.relpath(os.path.join(root, fn), spool_dir)
+                with open(os.path.join(root, fn), "rb") as f:
+                    out[rel] = hashlib.sha256(f.read()).hexdigest()
+    return out
+
+
+def test_member_spools_byte_identical_to_solo(tmp_path):
+    """Each member's spool shards hash-equal the solo run with that
+    state seed, and the ensemble used one compiled step."""
+    cache = {}
+    ens = _driver(tmp_path / "ens", _dist(seeds=SEEDS), cache=cache,
+                  record_events=True)
+    ens.run(N)
+    assert ens.compiled_step_cache_size() in (None, 1)
+    assert len(cache) == 1
+    ens_digests = _spk_digests(ens.spool.directory)
+
+    for m, seed in enumerate(SEEDS):
+        solo = _driver(tmp_path / f"solo{m}", _dist(state_seed=seed),
+                       record_events=True)
+        solo.run(N)
+        solo_digests = _spk_digests(solo.spool.directory)
+        want = {os.path.join(member_name(m), rel): h
+                for rel, h in solo_digests.items()}
+        got = {rel: h for rel, h in ens_digests.items()
+               if rel.startswith(member_name(m) + os.sep)}
+        assert got == want
+        np.testing.assert_array_equal(solo.spike_counts(N),
+                                      ens.spike_counts(N, member=m))
+
+
+def test_ensemble_preempt_resume_exactly_once(tmp_path):
+    """Preempt an ensemble mid-run, resume in a new driver: final
+    per-member spools byte-identical to the unpreempted reference
+    (exactly-once offsets cover member streams)."""
+    ref = _driver(tmp_path / "ref", _dist(seeds=SEEDS),
+                  record_events=True)
+    ref_out = ref.run(N)
+
+    first = _driver(tmp_path / "p", _dist(seeds=SEEDS),
+                    record_events=True, preempt_after_segments=2)
+    out1 = first.run(N)
+    assert out1["preempted"] and out1["final_step"] == 20
+    cache = {}
+    second = _driver(tmp_path / "p", _dist(seeds=SEEDS), cache=cache,
+                     record_events=True)
+    out2 = second.run(N)
+    assert not out2["preempted"] and out2["final_step"] == N
+    assert _spk_digests(second.spool.directory) \
+        == _spk_digests(ref.spool.directory)
+    assert len(cache) == 1
+    # state bit-identity too
+    for a, b in zip(_leaves(out2["state"]), _leaves(ref_out["state"])):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ensemble_plastic_member_checksum_matches_solo(tmp_path):
+    """Member m's learned-weight checksum == the solo plastic run with
+    state_seed=seeds[m] (the table realization is shared; only the
+    dynamics seed varies)."""
+    stdp = STDPParams()
+    ens = _driver(tmp_path / "ens", _dist(seeds=SEEDS[:2], stdp=stdp))
+    out = ens.run(N)
+    for m, seed in enumerate(SEEDS[:2]):
+        solo = _driver(tmp_path / f"s{m}",
+                       _dist(state_seed=seed, stdp=stdp))
+        sout = solo.run(N)
+        assert solo.plastic_summary(sout["state"])["weight_checksum"] \
+            == ens.plastic_summary(out["state"], member=m)["weight_checksum"]
+
+
+def test_ensemble_refuses_retile(tmp_path):
+    """A member-stacked checkpoint must not resume onto a different
+    tiling even with allow_retile (simulated by rewriting the
+    manifest's tiling, as a real 2-device checkpoint would carry)."""
+    import json
+    d = _driver(tmp_path, _dist(seeds=SEEDS))
+    d.run(10)
+    mpath = tmp_path / "step_00000010" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["meta"]["tiles_y"] = 2
+    mpath.write_text(json.dumps(manifest))
+    again = _driver(tmp_path, _dist(seeds=SEEDS), allow_retile=True)
+    with pytest.raises(ValueError, match="member axis"):
+        again.run(N)
+
+
+def test_seed_split_solo_state_seed():
+    """state_seed decouples dynamics from the table realization: same
+    tables, different trajectories; state_seed=None follows seed."""
+    law = gaussian_law()
+    a = _cfg(law, seed=3, state_seed=None)
+    b = _cfg(law, seed=3, state_seed=99)
+    ta, tb = build_shard_tables(a), build_shard_tables(b)
+    for la, lb in zip(_leaves(ta), _leaves(tb)):
+        np.testing.assert_array_equal(la, lb)
+    _, sa = simulate(init_sim_state(a), ta, a, N)
+    _, sb = simulate(init_sim_state(b), tb, b, N)
+    assert not np.array_equal(np.asarray(sa), np.asarray(sb))
+    assert a.state_seed_value == 3 and b.state_seed_value == 99

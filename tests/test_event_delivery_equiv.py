@@ -11,7 +11,7 @@ import pytest
 
 from repro.core.connectivity import exponential_law, gaussian_law
 from repro.core.engine import (EngineConfig, build_shard_tables,
-                               init_sim_state, run)
+                               init_sim_state, simulate)
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.synapses import SynapseTableSpec, build_tables, deliver_events
 from repro.kernels import ref
@@ -137,8 +137,8 @@ def test_engine_auto_kernels_matches_xla_engine():
     cfg = EngineConfig(decomp=d, law=law, use_kernels="auto")
     cfg_x = dataclasses.replace(cfg, use_kernels=False)
     tabs = build_shard_tables(cfg)
-    _, sp_k = jax.jit(lambda s: run(s, tabs, cfg, 60))(init_sim_state(cfg))
-    _, sp_x = jax.jit(lambda s: run(s, tabs, cfg_x, 60))(
+    _, sp_k = jax.jit(lambda s: simulate(s, tabs, cfg, 60))(init_sim_state(cfg))
+    _, sp_x = jax.jit(lambda s: simulate(s, tabs, cfg_x, 60))(
         init_sim_state(cfg_x))
     np.testing.assert_array_equal(np.asarray(sp_k), np.asarray(sp_x))
 

@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.core.connectivity import gaussian_law
 from repro.core.engine import (EngineConfig, build_shard_tables,
-                               init_sim_state, run)
+                               init_sim_state, simulate)
 from repro.core.grid import ColumnGrid, TileDecomposition
 
 
@@ -18,7 +18,7 @@ def test_kernel_engine_matches_jnp_engine():
     cfg = EngineConfig(decomp=dec, law=law)
     cfg_k = dataclasses.replace(cfg, use_kernels=True)
     tabs = build_shard_tables(cfg)
-    _, sp1 = jax.jit(lambda s: run(s, tabs, cfg, 50))(init_sim_state(cfg))
-    _, sp2 = jax.jit(lambda s: run(s, tabs, cfg_k, 50))(
+    _, sp1 = jax.jit(lambda s: simulate(s, tabs, cfg, 50))(init_sim_state(cfg))
+    _, sp2 = jax.jit(lambda s: simulate(s, tabs, cfg_k, 50))(
         init_sim_state(cfg_k))
     np.testing.assert_array_equal(np.asarray(sp1), np.asarray(sp2))

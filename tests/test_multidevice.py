@@ -88,7 +88,8 @@ def test_dist_matches_single_shard_statistics():
 from repro.core.connectivity import gaussian_law
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.engine import (EngineConfig, build_shard_tables,
-                               init_sim_state, run, firing_rate_hz)
+                               init_sim_state, firing_rate_hz,
+                               simulate as engine_simulate)
 from repro.core.dist_engine import DistConfig, simulate
 law = gaussian_law()
 grid = ColumnGrid(8, 8, 40)
@@ -96,7 +97,7 @@ grid = ColumnGrid(8, 8, 40)
 d1 = TileDecomposition(grid=grid, tiles_y=1, tiles_x=1, radius=law.radius)
 c1 = EngineConfig(decomp=d1, law=law, seed=5)
 t1 = build_shard_tables(c1)
-s1, _ = jax.jit(lambda s: run(s, t1, c1, 400))(init_sim_state(c1))
+s1, _ = jax.jit(lambda s: engine_simulate(s, t1, c1, 400))(init_sim_state(c1))
 r1 = firing_rate_hz(s1, c1, 400)
 # 8 shards
 d8 = TileDecomposition(grid=grid, tiles_y=4, tiles_x=2, radius=law.radius)

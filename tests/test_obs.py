@@ -16,7 +16,7 @@ import pytest
 from repro.core.connectivity import exponential_law, gaussian_law
 from repro.core.dist_engine import DistConfig
 from repro.core.engine import (EngineConfig, build_shard_tables,
-                               init_sim_state, run)
+                               init_sim_state, simulate)
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.kernels.spike_compact import spike_compact_pallas
 from repro.kernels.synaptic_accum import compact_events
@@ -121,7 +121,7 @@ def test_single_shard_run_records_events():
     tabs = build_shard_tables(cfg)
     rspec = recorder_spec(cfg, N)
     st, per_step, rec = jax.jit(
-        lambda s: run(s, tabs, cfg, N, recorder=rspec))(init_sim_state(cfg))
+        lambda s: simulate(s, tabs, cfg, N, recorder=rspec))(init_sim_state(cfg))
     cnt = int(rec["count"])
     assert cnt == int(np.asarray(per_step).sum())
     assert int(rec["dropped"]) == 0
@@ -332,8 +332,8 @@ def test_analyze_reports_rate_separation_direction(tmp_path):
         tabs = build_shard_tables(cfg)
         rspec = recorder_spec(cfg, 300)
         st, _, rec = jax.jit(
-            lambda s, c=cfg, t=tabs, r=rspec: run(s, t, c, 300,
-                                                  recorder=r))(
+            lambda s, c=cfg, t=tabs, r=rspec: simulate(s, t, c, 300,
+                                                    recorder=r))(
             init_sim_state(cfg))
         cnt = int(rec["count"])
         assert int(rec["dropped"]) == 0

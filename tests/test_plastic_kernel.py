@@ -20,7 +20,7 @@ import repro.kernels.plastic_step as ps
 from repro.core.connectivity import exponential_law, gaussian_law
 from repro.core.engine import (EngineConfig, build_shard_tables,
                                init_plasticity, init_sim_state,
-                               run_plastic)
+                               simulate)
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.stdp import STDPParams
 
@@ -37,7 +37,7 @@ def _run(cfg, steps, tabs=None):
     tabs = build_shard_tables(cfg) if tabs is None else tabs
     aux = init_plasticity(tabs, cfg)
     (st, tabs1, traces), per = jax.jit(
-        lambda s, t: run_plastic(s, t, aux, cfg, steps))(
+        lambda s, t: simulate(s, t, cfg, steps, plasticity=aux))(
             init_sim_state(cfg), tabs)
     return st, tabs1, traces, np.asarray(per)
 

@@ -19,7 +19,7 @@ from repro.core.dist_engine import (DistConfig, SimInputs,
                                     init_dist_state, make_sim_fn)
 from repro.core.engine import (EngineConfig, build_shard_tables,
                                init_plasticity, init_sim_state,
-                               run_plastic)
+                               simulate)
 from repro.core.grid import ColumnGrid, TileDecomposition
 from repro.core.retile import (gather_synapse_stream, local_gid_map,
                                retile_plastic, retile_tables)
@@ -59,13 +59,13 @@ def _canon(stream):
 
 
 # ---------------------------------------------------------------------------
-# Single-shard run_plastic vs the distributed carry
+# Single-shard plastic simulate vs the distributed carry
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("law", ["gaussian", "exponential"])
 def test_dist_plastic_matches_single_shard(law):
     """The distributed plastic scan at 1x1 is bit-identical to the
-    single-shard ``run_plastic`` reference: spikes, final weights and
+    single-shard plastic ``simulate`` reference: spikes, final weights and
     both trace arrays."""
     steps = 60
     dist = _dist(law)
@@ -73,7 +73,7 @@ def test_dist_plastic_matches_single_shard(law):
     tabs = build_shard_tables(cfg)
     aux = init_plasticity(tabs, cfg)
     (st, tabs1, traces), per = jax.jit(
-        lambda s, t: run_plastic(s, t, aux, cfg, steps))(
+        lambda s, t: simulate(s, t, cfg, steps, plasticity=aux))(
             init_sim_state(cfg), tabs)
 
     mesh = make_mesh((1, 1), ("data", "model"))
@@ -104,9 +104,9 @@ def test_dist_plastic_matches_single_shard(law):
     assert delta.sum() > 0
 
 
-def test_run_plastic_ignores_halo_tiers_of_multitile_tables():
+def test_plastic_simulate_ignores_halo_tiers_of_multitile_tables():
     """``init_plasticity`` covers every tier, but the single-shard
-    ``run_plastic`` consumer steps only the local one -- handing it a
+    plastic ``simulate`` consumer steps only the local one -- handing it a
     multi-tile shard's tables (halo tiers present) must not corrupt the
     scan carry (regression: the N-tier trace state used to collapse to
     1 tier after the first step)."""
@@ -117,7 +117,7 @@ def test_run_plastic_ignores_halo_tiers_of_multitile_tables():
     aux = init_plasticity(tabs, cfg)
     assert len(aux["masks"]) > 1                 # halo tiers present
     (st, t1, traces), per = jax.jit(
-        lambda s, t: run_plastic(s, t, aux, cfg, 5))(
+        lambda s, t: simulate(s, t, cfg, 5, plasticity=aux))(
             init_sim_state(cfg), tabs)
     assert np.asarray(per).shape == (5,)
     assert len(traces["x_pre"]) == 1             # local tier only

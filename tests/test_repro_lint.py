@@ -12,7 +12,8 @@ import threading
 
 import pytest
 
-from repro.analysis import (ALL_CHECKERS, DonationChecker,
+from repro.analysis import (ALL_CHECKERS, DeprecatedApiChecker,
+                            DonationChecker,
                             DtypeContractsChecker, MetaDriftChecker,
                             Module, PallasGeometryChecker, Project,
                             PytreeAuxChecker, TracerPurityChecker)
@@ -516,6 +517,55 @@ def test_pallas_geometry_resident_ring_budget():
     blown = RING_CLEAN.replace("RING_N_MAX = 8192", "RING_N_MAX = 16384")
     hits = run_checker(PallasGeometryChecker, [blown], paths=[path])
     assert any("RING_N_MAX" in f.message for f in hits)
+
+
+# ---------------------------------------------------------------------------
+# deprecated-api
+# ---------------------------------------------------------------------------
+
+DEPRECATED_IMPORT_BAD = '''
+from repro.core.engine import run, simulate
+from repro.core import engine
+
+def drive(s, t, c):
+    run(s, t, c, 10)
+    return engine.run_plastic(s, t, {}, c, 10)
+'''
+
+DEPRECATED_CLEAN = '''
+from repro.core.engine import simulate
+
+def analyze_run(d):
+    return d
+
+class Driver:
+    def run(self, n):              # unrelated method named run
+        return n
+
+def drive(s, t, c, d):
+    simulate(s, t, c, 10, plasticity={})
+    analyze_run(d)
+    return Driver().run(3)
+'''
+
+
+def test_deprecated_api_flags_imports_and_calls():
+    hits = assert_flags(DeprecatedApiChecker, DEPRECATED_IMPORT_BAD,
+                        DEPRECATED_CLEAN)
+    msgs = "\n".join(f.message for f in hits)
+    assert "import of retired" in msgs
+    assert "run_plastic" in msgs and "simulate" in msgs
+
+
+def test_deprecated_api_flags_alias_resurrection_in_engine():
+    resurrected = ("def run(state, tables, cfg, n_steps):\n"
+                   "    return state\n")
+    hits = run_checker(DeprecatedApiChecker, [resurrected],
+                       paths=["src/repro/core/engine.py"])
+    assert hits and "redefinition" in hits[0].message
+    # the same def anywhere else is NOT the retired alias
+    assert not run_checker(DeprecatedApiChecker, [resurrected],
+                           paths=["src/repro/runtime/other.py"])
 
 
 # ---------------------------------------------------------------------------
